@@ -1,0 +1,51 @@
+"""Fig-13 analogue: throughput vs number of parallel hash units.
+
+The paper's KV-store pipeline is bound by min(n_hash x hash_rate,
+slowest_other_block). We reproduce the same saturation law with the prefix
+-cache hash stage: hash units scale linearly until the resource-management
+bound (~39 Mops in the paper) caps the pipeline.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serve.prefix_cache import prompt_key
+
+HASH_RATE_OPS = 3.13e6     # one 64-cycle SHA core @200MHz (paper §6.2.2)
+OTHER_BLOCK_BOUND = 39.28e6
+
+
+def analytic_throughput(n_hash: int) -> float:
+    return min(n_hash * HASH_RATE_OPS, OTHER_BLOCK_BOUND)
+
+
+def measured_hash_rate(n: int = 2000) -> float:
+    rng = np.random.default_rng(0)
+    keys = [rng.integers(0, 1000, size=32).astype(np.int32)
+            for _ in range(n)]
+    t0 = time.perf_counter()
+    for k in keys:
+        prompt_key(k)
+    dt = time.perf_counter() - t0
+    return n / dt
+
+
+def run():
+    rows = ["n_hash_units,analytic_Mops,bound"]
+    for n in (1, 2, 4, 8, 16, 32):
+        t = analytic_throughput(n)
+        bound = "hash" if t < OTHER_BLOCK_BOUND else "resource_mgmt"
+        rows.append(f"{n},{t / 1e6:.2f},{bound}")
+    rows.append(f"# host sha256 rate: {measured_hash_rate() / 1e6:.3f} Mops "
+                f"(engine-side measurement)")
+    return "\n".join(rows)
+
+
+def main():
+    print(run())
+
+
+if __name__ == "__main__":
+    main()

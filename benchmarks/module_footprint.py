@@ -1,0 +1,56 @@
+"""Table-2 analogue: per-module resource usage.
+
+The paper reports LUT/FF/BRAM per block; the TPU counterparts are
+parameter bytes, per-device HBM state, and the Pallas kernels' VMEM
+working sets (BlockSpec tiles + scratch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.models import lm
+
+
+def _tree_bytes(t):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+
+def kernel_vmem(block_q=128, block_k=128, hd=128, page=16, G=4,
+                chunk=32, hd_r=64, block_d=256, N=16, T=256):
+    """VMEM bytes per grid step per kernel (tiles + scratch, f32/bf16)."""
+    fa = (block_q * hd * 2 + 2 * block_k * hd * 2          # q,k,v tiles bf16
+          + block_q * 4 * 2 + block_q * hd * 4)            # m,l,acc scratch
+    pd = (G * hd * 2 + 2 * page * hd * 2 + G * 4 * 2 + G * hd * 4)
+    wkv = (4 * chunk * hd_r * 4 + hd_r * hd_r * 4 * 2 + chunk * chunk * 4)
+    ls = (2 * T * block_d * N * 4 + block_d * N * 4 * 2)
+    return {"flash_attention": fa, "paged_decode": pd, "wkv6": wkv,
+            "linear_scan": ls}
+
+
+def run():
+    rows = ["module,metric,bytes"]
+    for arch in ("qwen3-8b", "deepseek-v2-lite-16b", "rwkv6-1.6b"):
+        cfg = get_config(arch)
+        params = jax.eval_shape(
+            lambda c=cfg: lm.init_params(c, jax.random.PRNGKey(0)))
+        emb = params["embed"]
+        rows.append(f"{arch}/embed,params,{emb.size * 2}")
+        rows.append(f"{arch}/stack,params,"
+                    f"{_tree_bytes(params['stack'])}")
+        state = jax.eval_shape(
+            lambda c=cfg: lm.init_serve_state(c, 128, 32768))
+        rows.append(f"{arch}/kv_state_decode32k,hbm,"
+                    f"{_tree_bytes(state['caches'])}")
+    for k, v in kernel_vmem().items():
+        rows.append(f"kernel/{k},vmem_per_step,{v}")
+    return "\n".join(rows)
+
+
+def main():
+    print(run())
+
+
+if __name__ == "__main__":
+    main()

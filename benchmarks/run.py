@@ -1,0 +1,39 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` style CSV blocks. See DESIGN.md §5 for
+the table/figure -> benchmark mapping.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (building_blocks, e2e, kv_scaling,
+                            module_footprint, reliability, resource_miss)
+    sections = [
+        ("table3_building_blocks", building_blocks.run),
+        ("table2_module_footprint", module_footprint.run),
+        ("fig12_resource_miss", resource_miss.run),
+        ("fig13_kv_scaling", kv_scaling.run),
+        ("sec6.1_reliability_gbn_sr", reliability.run),
+        ("fig14_e2e_prototype", e2e.run),
+    ]
+    failures = []
+    for name, fn in sections:
+        print(f"\n==== {name} ====")
+        t0 = time.perf_counter()
+        try:
+            print(fn())
+            print(f"# section wall: {time.perf_counter() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+    print("\nall benchmark sections passed")
+
+
+if __name__ == "__main__":
+    main()

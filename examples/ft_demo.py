@@ -1,0 +1,63 @@
+"""Fault-tolerance demo: identical training run under SR and GBN recovery
+with injected failures; shows SR's goodput advantage and that both reach
+the same parameters (Transport Subsystem, paper §4.4).
+
+  PYTHONPATH=src python examples/ft_demo.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.data import DataConfig, SyntheticPackedDataset
+from repro.ft import FaultTolerantTrainer, FTConfig
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.sharding.policy import NULL_POLICY
+
+
+def run(policy: str, failure_rate: float, steps: int = 30):
+    cfg = SMOKE_CONFIGS["musicgen-large"].scaled(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    data = SyntheticPackedDataset(DataConfig(
+        seq_len=64, global_batch=4, vocab_size=cfg.vocab_size))
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=steps)
+    grad_fn = jax.jit(lambda p, t: (
+        jax.grad(lambda pp: lm.forward_loss(pp, t, cfg, NULL_POLICY)[0])(p),
+        {}))
+    update_fn = jax.jit(lambda g, o, p: adamw_update(g, o, p, ocfg))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = Checkpointer(d)
+        opt = adamw_init(params)
+        ckpt.save(0, (params, opt), blocking=True)
+        tr = FaultTolerantTrainer(
+            grad_fn, update_fn, data, ckpt,
+            FTConfig(policy=policy, failure_rate=failure_rate,
+                     checkpoint_every=10, seed=11), n_workers=4)
+        params, opt, stats = tr.run(params, opt, steps)
+    return params, stats
+
+
+def main():
+    ref, _ = run("sr", 0.0)
+    for pol in ("sr", "gbn"):
+        p, s = run(pol, failure_rate=0.08)
+        drift = max(float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(p)))
+        eff = s.steps / (s.steps + s.steps_replayed
+                         + s.microbatches_recomputed / 4)
+        print(f"{pol.upper():3s}: failures={s.failures:2d} "
+              f"recomputed_mb={s.microbatches_recomputed:2d} "
+              f"replayed={s.steps_replayed:3d} restores="
+              f"{s.checkpoints_restored} goodput={eff:.3f} "
+              f"param_drift_vs_no_failure={drift:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
+                                           reshard_tree)  # noqa

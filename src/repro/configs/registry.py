@@ -1,0 +1,25 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.configs import (qwen1_5_4b, nemotron_4_15b, qwen3_8b,
+                           h2o_danube_3_4b, moonshot_v1_16b_a3b,
+                           deepseek_v2_lite_16b, chameleon_34b, rwkv6_1_6b,
+                           musicgen_large, jamba_v0_1_52b)
+
+_MODULES = (qwen1_5_4b, nemotron_4_15b, qwen3_8b, h2o_danube_3_4b,
+            moonshot_v1_16b_a3b, deepseek_v2_lite_16b, chameleon_34b,
+            rwkv6_1_6b, musicgen_large, jamba_v0_1_52b)
+
+CONFIGS: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+SMOKE_CONFIGS: Dict[str, ModelConfig] = {m.CONFIG.name: m.SMOKE for m in _MODULES}
+ARCH_NAMES: Tuple[str, ...] = tuple(CONFIGS)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKE_CONFIGS if smoke else CONFIGS
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(table)}")
+    return table[name]

@@ -1,0 +1,38 @@
+"""Assigned input-shape set for the LM-family architectures.
+
+``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers ``prefill_step``;
+``decode_32k`` / ``long_500k`` lower ``serve_step`` (one new token against a
+KV cache / recurrent state of ``seq_len``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524288, 1)
+
+SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+# Archs with sub-quadratic sequence handling (SSM / hybrid / sliding-window)
+# run long_500k; pure full-attention archs skip it (see DESIGN.md §6).
+LONG_CONTEXT_ARCHS = frozenset({"rwkv6-1.6b", "jamba-v0.1-52b", "h2o-danube-3-4b"})
+
+
+def applicable_shapes(arch_name: str) -> Tuple[ShapeConfig, ...]:
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if arch_name in LONG_CONTEXT_ARCHS:
+        out.append(LONG_500K)
+    return tuple(out)

@@ -1,0 +1,17 @@
+"""JingZhao core: the paper's contribution as composable JAX modules.
+
+- pipeline:    PPU/Stage/Pipeline dataflow model (Fig. 4)
+- multiqueue:  Dynamic MultiQueue building block (Table 1, Fig. 9)
+- primitives:  Append/Remove Header, Scatter/Gather Data (Table 1)
+- resource:    Resource Subsystem: two-tier store, VoQ non-blocking misses
+- transport:   Transport Subsystem: GBN/SR reliability policies
+- simulation:  system-level event simulation (host/bus/cache)
+"""
+from repro.core.multiqueue import (HostMultiQueue, MQState, batched_enqueue,
+                                   mq_init, mq_pop, mq_push, mq_sizes)  # noqa
+from repro.core.pipeline import PPU, Pipeline, Stage, measure_ppu  # noqa
+from repro.core.resource import (BusModel, PagePool,
+                                 VoQResourceStore)  # noqa
+from repro.core.simulation import SimConfig, miss_overhead_model, simulate  # noqa
+from repro.core.transport import (simulate_reliability,
+                                  simulate_training_goodput)  # noqa

@@ -1,0 +1,161 @@
+"""Dynamic MultiQueue — JingZhao's core building block (Table 1, Fig. 9).
+
+Thousands of logical FIFOs share one fixed block of memory, with dynamic
+enqueue/dequeue and malloc/free-style insert/delete. The paper motivates it
+for per-connection NIC state; here it backs (a) the serving engine's
+request/slot management, (b) MoE per-expert token queues, (c) the KV page
+free-list. Implemented both as a host-side object (engine bookkeeping) and
+as pure-JAX functions over static-shape arrays (in-graph use).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# host-side multiqueue (engine bookkeeping; numpy, O(1) ops)
+# --------------------------------------------------------------------------
+
+class HostMultiQueue:
+    """N logical FIFOs in one shared slot pool with a free-list.
+
+    push/pop are O(1); the pool is the paper's shared block RAM, the
+    free-list its Dynamic Insert/Delete.
+    """
+
+    def __init__(self, n_queues: int, capacity: int):
+        self.capacity = capacity
+        self.n_queues = n_queues
+        self._next = np.full(capacity, -1, np.int64)    # linked slots
+        self._payload: List[Any] = [None] * capacity
+        self._head = np.full(n_queues, -1, np.int64)
+        self._tail = np.full(n_queues, -1, np.int64)
+        self._len = np.zeros(n_queues, np.int64)
+        self._free = list(range(capacity - 1, -1, -1))  # stack of free slots
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def qlen(self, q: int) -> int:
+        return int(self._len[q])
+
+    def push(self, q: int, item: Any) -> bool:
+        """Dynamic Enqueue; False when the shared pool is exhausted."""
+        if not self._free:
+            return False
+        slot = self._free.pop()
+        self._payload[slot] = item
+        self._next[slot] = -1
+        if self._tail[q] >= 0:
+            self._next[self._tail[q]] = slot
+        else:
+            self._head[q] = slot
+        self._tail[q] = slot
+        self._len[q] += 1
+        return True
+
+    def pop(self, q: int) -> Optional[Any]:
+        """Dynamic Dequeue; None when the logical queue is empty."""
+        slot = self._head[q]
+        if slot < 0:
+            return None
+        item = self._payload[slot]
+        self._payload[slot] = None
+        self._head[q] = self._next[slot]
+        if self._head[q] < 0:
+            self._tail[q] = -1
+        self._next[slot] = -1
+        self._free.append(int(slot))
+        self._len[q] -= 1
+        return item
+
+    def drain(self, q: int) -> List[Any]:
+        out = []
+        while True:
+            item = self.pop(q)
+            if item is None:
+                return out
+            out.append(item)
+
+
+# --------------------------------------------------------------------------
+# in-graph multiqueue (pure JAX, static shapes)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MQState:
+    """Ring-buffer multiqueue: [n_queues, capacity] payload + head/tail."""
+    buf: jnp.ndarray        # [Q, C, ...payload]
+    head: jnp.ndarray       # [Q] int32 (absolute counters)
+    tail: jnp.ndarray       # [Q] int32
+
+
+def mq_init(n_queues: int, capacity: int, payload_shape: Tuple[int, ...],
+            dtype=jnp.float32) -> MQState:
+    return MQState(
+        buf=jnp.zeros((n_queues, capacity) + payload_shape, dtype),
+        head=jnp.zeros((n_queues,), jnp.int32),
+        tail=jnp.zeros((n_queues,), jnp.int32),
+    )
+
+
+def mq_push(state: MQState, q: jnp.ndarray, item: jnp.ndarray
+            ) -> Tuple[MQState, jnp.ndarray]:
+    """Push `item` to queue q (scalar int32). Returns (state, ok)."""
+    cap = state.buf.shape[1]
+    size = state.tail[q] - state.head[q]
+    ok = size < cap
+    slot = state.tail[q] % cap
+    buf = jax.lax.cond(
+        ok,
+        lambda: state.buf.at[q, slot].set(item.astype(state.buf.dtype)),
+        lambda: state.buf)
+    tail = state.tail.at[q].add(jnp.where(ok, 1, 0))
+    return MQState(buf, state.head, tail), ok
+
+
+def mq_pop(state: MQState, q: jnp.ndarray
+           ) -> Tuple[MQState, jnp.ndarray, jnp.ndarray]:
+    """Pop from queue q. Returns (state, item, ok). Empty pop yields zeros."""
+    cap = state.buf.shape[1]
+    size = state.tail[q] - state.head[q]
+    ok = size > 0
+    slot = state.head[q] % cap
+    item = jnp.where(ok, state.buf[q, slot], jnp.zeros_like(state.buf[q, 0]))
+    head = state.head.at[q].add(jnp.where(ok, 1, 0))
+    return MQState(state.buf, head, state.tail), item, ok
+
+
+def mq_sizes(state: MQState) -> jnp.ndarray:
+    return state.tail - state.head
+
+
+# --------------------------------------------------------------------------
+# batched enqueue into per-queue capacity buffers (the MoE dispatch shape)
+# --------------------------------------------------------------------------
+
+def batched_enqueue(items: jnp.ndarray, queue_ids: jnp.ndarray,
+                    n_queues: int, capacity: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Enqueue T items into per-queue buffers in one shot.
+
+    items: [T, D]; queue_ids: [T] -> (buffers [Q, C, D], positions [T],
+    kept [T]). Position assignment = cumsum of one-hot (arrival order),
+    drops on overflow — identical semantics to the MoE dispatch and to the
+    kernels/moe_dispatch.py Pallas kernel.
+    """
+    T = items.shape[0]
+    oh = jax.nn.one_hot(queue_ids, n_queues, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0), queue_ids[:, None],
+                              axis=1)[:, 0] - 1
+    kept = pos < capacity
+    pos_safe = jnp.where(kept, pos, capacity)
+    buf = jnp.zeros((n_queues, capacity + 1, items.shape[1]), items.dtype)
+    buf = buf.at[queue_ids, pos_safe].set(items, mode="drop")
+    return buf[:, :capacity], pos, kept

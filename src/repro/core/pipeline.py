@@ -1,0 +1,95 @@
+"""PPU / Stage / Pipeline — the paper's dataflow model (Fig. 4) in JAX.
+
+A PPU (Protocol Processing Unit) is a named pure function over a payload
+pytree. PPUs chain into a Stage; heterogeneous Stages form a Pipeline. The
+model blocks in models/ follow this structure implicitly (norm -> mixer ->
+residual -> mlp); this module makes the abstraction explicit and reusable
+for the serving engine, the data pipeline, and the benchmarks — and gives
+each stage a cost model hook so the Table-3-style microbenchmarks and the
+event simulator (core/simulation.py) can reason about pipeline throughput
+as min-over-stages, exactly the paper's §6.1 analysis.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class PPU:
+    """A named pure function payload -> payload (+ optional aux)."""
+    name: str
+    fn: Callable[..., Any]
+    # analytic per-call cost hooks for the event simulator (optional)
+    bytes_per_call: Callable[[Any], float] = lambda _: 0.0
+    flops_per_call: Callable[[Any], float] = lambda _: 0.0
+    replicas: int = 1   # paper §3.2.2: replicate PPUs in a stage for tput
+
+    def __call__(self, payload, **kw):
+        return self.fn(payload, **kw)
+
+
+@dataclass
+class Stage:
+    """One or more PPUs applied in sequence; one pipeline step."""
+    name: str
+    ppus: List[PPU]
+
+    def __call__(self, payload, **kw):
+        for ppu in self.ppus:
+            payload = ppu(payload, **kw)
+        return payload
+
+
+@dataclass
+class Pipeline:
+    """Chained stages. `jit()` returns the fused jax program.
+
+    Throughput model (paper §6.1): a pipeline is bound by its slowest
+    stage; `bound_stage(payload)` evaluates the analytic cost hooks to
+    name it — used by benchmarks/building_blocks.py.
+    """
+    name: str
+    stages: List[Stage] = field(default_factory=list)
+
+    def add(self, stage: Stage) -> "Pipeline":
+        self.stages.append(stage)
+        return self
+
+    def __call__(self, payload, **kw):
+        for st in self.stages:
+            payload = st(payload, **kw)
+        return payload
+
+    def jit(self, **jit_kw):
+        return jax.jit(self.__call__, **jit_kw)
+
+    def bound_stage(self, payload) -> Tuple[str, float]:
+        worst, t_worst = "", -1.0
+        for st in self.stages:
+            t = 0.0
+            for ppu in st.ppus:
+                t += max(ppu.bytes_per_call(payload) / 819e9,
+                         ppu.flops_per_call(payload) / 197e12) / max(
+                             ppu.replicas, 1)
+            if t > t_worst:
+                worst, t_worst = st.name, t
+        return worst, t_worst
+
+
+def measure_ppu(fn: Callable, *args, iters: int = 20, warmup: int = 3,
+                **kw) -> float:
+    """Wall-time a jit'd PPU (µs/call) — Table-3 analogue measurements."""
+    jfn = jax.jit(fn)
+    out = jfn(*args, **kw)
+    jax.block_until_ready(out)
+    for _ in range(warmup - 1):
+        jax.block_until_ready(jfn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jfn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

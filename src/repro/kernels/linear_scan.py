@@ -1,0 +1,62 @@
+"""Pallas TPU first-order linear recurrence: h_t = a_t * h_{t-1} + b_t.
+
+The Mamba selective-scan hot loop, restructured for TPU (DESIGN.md §2):
+instead of the CUDA kernel's per-thread sequential state in registers, the
+channel/state plane [Dblk, N] is the vector lane dimension and the time axis
+is a VMEM-resident fori_loop — each grid program owns one (batch, channel
+block) and streams its [T, Dblk, N] slab through VMEM. Used for decode and
+as the inner engine of the chunked training scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(a_ref, b_ref, h0_ref, hs_ref, hlast_ref, *, T):
+    h = h0_ref[0]                                # [Dblk, N]
+
+    def step(t, h):
+        h = a_ref[0, t] * h + b_ref[0, t]
+        hs_ref[0, t] = h
+        return h
+
+    h = jax.lax.fori_loop(0, T, step, h)
+    hlast_ref[0] = h
+
+
+def linear_scan(a, b, h0, *, block_d: int = 256, interpret: bool = False):
+    """a, b: [B, T, D, N]; h0: [B, D, N] -> (h_all [B,T,D,N], h_last)."""
+    B, T, D, N = a.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    nd = D // block_d
+
+    def ab_map(i, j):
+        return (i, 0, j, 0)
+
+    def h_map(i, j):
+        return (i, j, 0)
+
+    hs, hlast = pl.pallas_call(
+        functools.partial(_scan_kernel, T=T),
+        grid=(B, nd),
+        in_specs=[
+            pl.BlockSpec((1, T, block_d, N), ab_map),
+            pl.BlockSpec((1, T, block_d, N), ab_map),
+            pl.BlockSpec((1, block_d, N), h_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, block_d, N), ab_map),
+            pl.BlockSpec((1, block_d, N), h_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D, N), a.dtype),
+            jax.ShapeDtypeStruct((B, D, N), a.dtype),
+        ],
+        interpret=interpret,
+    )(a, b, h0)
+    return hs, hlast

@@ -1,0 +1,367 @@
+"""Trip-count-aware cost walk over optimized HLO text.
+
+This is the framework's "system-bus simulator" (JingZhao C4 analogue): the
+compiled artifact is parsed into computations/instructions, ``while`` loops
+contribute their ``known_trip_count`` as multipliers (lax.scan bodies are
+otherwise counted once by XLA's own cost model), and three quantities are
+aggregated per device:
+
+  * FLOPs           — every `dot` (2 x prod(out_dims) x prod(contract_dims)),
+                      including dots inside fusion computations;
+  * HBM bytes       — operand+output bytes of top-level instructions
+                      (fusion internals excluded: they live in registers/VMEM);
+  * collective bytes— wire bytes per device with per-op ring factors:
+                      all-reduce 2(n-1)/n, all-gather/reduce-scatter (n-1)/n,
+                      all-to-all (n-1)/n, collective-permute 1.
+
+Known bias (documented in EXPERIMENTS.md): XLA-CPU upcasts bf16 dot inputs
+to f32, inflating byte counts vs the TPU target by <= 2x on weight streams.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+)
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += _DTYPE_BYTES[dtype] * n
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)   # name -> type str
+    instructions: List[Instruction] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+)\s*\{\s*$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([^,]+(?:\([^)]*\))?)")
+
+
+def _split_type_and_rest(s: str) -> Tuple[str, str]:
+    """Split '  f32[1,2]{1,0} dot(...)' or '(f32[], s32[]) tuple(...)'."""
+    s = s.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[: i + 1], s[i + 1:].lstrip()
+        return s, ""
+    i = s.find(" ")
+    return s[:i], s[i + 1:].lstrip()
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip()) if "{" in line else None
+            if line and not line.startswith(" ") and m:
+                cur = Computation(name=m.group(2))
+                if m.group(1):
+                    entry_name = m.group(2)
+                # params
+                for pm in re.finditer(r"%?([\w.\-]+):\s*", m.group(3)):
+                    pname = pm.group(1)
+                    rest = m.group(3)[pm.end():]
+                    ptype, _ = _split_type_and_rest(rest + " ")
+                    cur.params[pname] = ptype
+                    cur.symbols[pname] = ptype
+            continue
+        stripped = line.strip()
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = re.match(r"^(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        is_root = bool(m.group(1))
+        name = m.group(2)
+        type_str, rest = _split_type_and_rest(m.group(3))
+        om = re.match(r"([\w\-]+)\((.*)$", rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        # operand list up to matching close paren
+        body = om.group(2)
+        depth = 1
+        end = len(body)
+        for i, ch in enumerate(body):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = body[:end]
+        attrs = body[end + 1:].lstrip(", ")
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        inst = Instruction(name, type_str, opcode, operands, attrs, is_root)
+        cur.instructions.append(inst)
+        cur.symbols[name] = type_str
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(attrs: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _called(attrs: str, key: str) -> List[str]:
+    m = re.search(key + r"=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?", attrs)
+    if not m:
+        return []
+    return [s.strip().lstrip("%") for s in m.group(1).split(",")]
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def compute_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Computation name -> execution-count multiplier (from entry)."""
+    entry = comps["__entry__"]
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    # iterate to fixpoint over call graph (acyclic in HLO)
+    order = [entry.name]
+    seen = {entry.name}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for inst in comp.instructions:
+            callees: List[Tuple[str, float]] = []
+            if inst.opcode == "while":
+                tc = _trip_count(inst.attrs)
+                for key, factor in (("body", tc), ("condition", tc + 1)):
+                    for c in _called(inst.attrs, key):
+                        callees.append((c, factor))
+            elif inst.opcode == "fusion":
+                for c in _called(inst.attrs, "calls"):
+                    callees.append((c, 1.0))
+            elif inst.opcode in ("call", "async-start"):
+                for c in _called(inst.attrs, "to_apply") + _called(
+                        inst.attrs, "called_computations"):
+                    callees.append((c, 1.0))
+            elif inst.opcode == "conditional":
+                for c in _called(inst.attrs, "branch_computations") + \
+                        _called(inst.attrs, "true_computation") + \
+                        _called(inst.attrs, "false_computation"):
+                    callees.append((c, 1.0))
+            # reduce/map/sort reducers: negligible, skip
+            for c, factor in callees:
+                mult[c] += m * factor
+                if c not in seen:
+                    seen.add(c)
+                    order.append(c)
+    return dict(mult)
+
+
+def _fusion_comp_names(comps) -> set:
+    out = set()
+    for comp in comps.values():
+        for inst in comp.instructions:
+            if inst.opcode == "fusion":
+                out.update(_called(inst.attrs, "calls"))
+    return out
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "add-dependency", "partition-id",
+    "replica-id", "iota", "call",
+}
+
+
+def analyze(text: str, default_group: int = 1) -> Dict:
+    comps = parse_hlo(text)
+    mult = compute_multipliers(comps)
+    fusion_comps = _fusion_comp_names(comps)
+
+    flops = 0.0
+    flops_by_comp: Dict[str, float] = defaultdict(float)
+    hbm_bytes = 0.0
+    coll_bytes = 0.0
+    coll_by_op: Dict[str, float] = defaultdict(float)
+    coll_list: List[Tuple[float, str]] = []
+    dots: List[Tuple[float, str]] = []
+
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_comps
+        for inst in comp.instructions:
+            # ---- flops (dots anywhere) --------------------------------
+            if inst.opcode == "dot":
+                _, out_dims = _shape_dims(inst.type_str)
+                lhs_type = comp.symbols.get(inst.operands[0], "")
+                _, lhs_dims = _shape_dims(lhs_type)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                  inst.attrs)
+                csize = 1
+                if cdims and cdims.group(1):
+                    for d in cdims.group(1).split(","):
+                        if int(d) < len(lhs_dims):
+                            csize *= lhs_dims[int(d)]
+                f = 2.0 * csize
+                for d in out_dims:
+                    f *= d
+                flops += m * f
+                flops_by_comp[cname] += m * f
+                dots.append((m * f, f"{cname}/{inst.name} {inst.type_str}"))
+            elif inst.opcode == "convolution":
+                # not used by this framework; coarse estimate
+                _, out_dims = _shape_dims(inst.type_str)
+                f = 2.0
+                for d in out_dims:
+                    f *= d
+                flops += m * f
+                flops_by_comp[cname] += m * f
+
+            # ---- collectives ------------------------------------------
+            if inst.opcode in COLLECTIVE_OPS:
+                op = inst.opcode.replace("-start", "")
+                n = _group_size(inst.attrs, default_group)
+                opb = sum(_shape_bytes(comp.symbols.get(o, ""))
+                          for o in inst.operands)
+                # XLA-CPU float-normalization promotes bf16 all-reduce
+                # accumulation to f32 (reducer "..._promoted"); the TPU
+                # target reduces activation grads in bf16 — count native.
+                if "promoted" in inst.attrs and "f32" in inst.type_str:
+                    opb *= 0.5
+                if op == "all-reduce":
+                    wire = 2.0 * (n - 1) / max(n, 1) * opb
+                elif op in ("all-gather",):
+                    wire = (n - 1) * opb  # operand is the local shard
+                elif op in ("reduce-scatter", "all-to-all",
+                            "ragged-all-to-all"):
+                    wire = (n - 1) / max(n, 1) * opb
+                else:  # collective-permute
+                    wire = opb
+                coll_bytes += m * wire
+                coll_by_op[op] += m * wire
+                coll_list.append(
+                    (m * wire, f"{cname}/{inst.name} {op} n={n} "
+                               f"opb={opb / 1e6:.2f}MB x{m:g}"))
+
+            # ---- HBM bytes (top-level ops only) ------------------------
+            if not in_fusion and inst.opcode not in _SKIP_BYTES_OPS:
+                if inst.opcode == "dynamic-slice":
+                    # reads only the sliced region (TPU in-place view)
+                    b = 2.0 * _shape_bytes(inst.type_str)
+                elif inst.opcode == "dynamic-update-slice":
+                    # writes (and RAWs) only the update region; the carry
+                    # buffer itself is aliased in-place by XLA
+                    upd = (comp.symbols.get(inst.operands[1], "")
+                           if len(inst.operands) > 1 else "")
+                    b = 2.0 * _shape_bytes(upd)
+                elif inst.opcode in ("scatter", "scatter-add"):
+                    # in-place on the aliased carry: touch updates+indices
+                    upd = (comp.symbols.get(inst.operands[-1], "")
+                           if len(inst.operands) >= 3 else inst.type_str)
+                    idx = (comp.symbols.get(inst.operands[1], "")
+                           if len(inst.operands) >= 3 else "")
+                    b = 2.0 * _shape_bytes(upd) + _shape_bytes(idx)
+                elif inst.opcode == "fusion" and (
+                        "dynamic-update-slice" in inst.name
+                        or "scatter" in inst.name):
+                    # fusion rooted at an in-place update of an aliased
+                    # buffer (KV-cache writes): the big carry operand and
+                    # the identically-sized output are views, not traffic —
+                    # count everything else (update region, indices) twice
+                    out_b = _shape_bytes(inst.type_str)
+                    ops_b = [_shape_bytes(comp.symbols.get(o, ""))
+                             for o in inst.operands]
+                    big = max(ops_b) if ops_b else 0.0
+                    b = 2.0 * (sum(ops_b) - (big if big >= 0.5 * out_b
+                                             else 0.0))
+                else:
+                    b = _shape_bytes(inst.type_str)
+                    for o in inst.operands:
+                        b += _shape_bytes(comp.symbols.get(o, ""))
+                hbm_bytes += m * b
+
+    coll_list.sort(reverse=True)
+    dots.sort(reverse=True)
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll_bytes,
+        "collective_by_op": dict(coll_by_op),
+        "top_collectives": [f"{b / 1e9:.3f}GB {d}" for b, d in coll_list[:12]],
+        "top_dots": [f"{f / 1e12:.3f}TF {d}" for f, d in dots[:12]],
+        "flops_by_comp": {k: v for k, v in sorted(
+            flops_by_comp.items(), key=lambda kv: -kv[1])[:10]},
+        "n_computations": len(comps) - 1,
+    }

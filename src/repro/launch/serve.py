@@ -1,0 +1,50 @@
+"""Serving launcher (the in-network KV-store reference design analogue).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+      --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.models import lm
+from repro.serve.engine import EngineConfig, Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=list(ARCH_NAMES))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=160)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=args.slots, cache_len=args.cache_len,
+        n_pages=args.slots * args.cache_len // 16 + 16, page_size=16,
+        eos_token=-1))
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(i, rng.integers(
+            1, cfg.vocab_size,
+            size=int(rng.integers(8, 48))).astype(np.int32),
+            max_new_tokens=args.max_new))
+    t0 = time.perf_counter()
+    done = eng.run_until_done()
+    dt = time.perf_counter() - t0
+    print(f"completed {len(done)}/{args.requests} in {dt:.1f}s  "
+          f"({eng.stats['decode_tokens'] / dt:.1f} decode tok/s)")
+    print("stats:", eng.stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Common layer primitives: norms, rotary embedding, dense MLPs, init."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> jnp.ndarray:
+    """[..., dim//2] rotary angles for integer positions."""
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    return positions.astype(jnp.float32)[..., None] * freqs  # [..., dim//2]
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., S, n, d]; angles: [S, d//2] (or broadcastable [..., S, d//2])."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if angles.ndim == 2:  # [S, d/2] -> broadcast over batch and heads
+        ang = angles[..., None, :]
+        while ang.ndim < x1.ndim:
+            ang = ang[None]
+    else:
+        ang = angles[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dtype)
+
+
+def activation(name: str):
+    if name == "swiglu":
+        raise ValueError("swiglu handled structurally (gate+up)")
+    if name == "sq_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(name)
+
+
+def dense_mlp(x: jnp.ndarray, p: dict, cfg: ModelConfig, policy) -> jnp.ndarray:
+    """Dense FFN; swiglu uses (gate, up, down), others (up, down)."""
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = activation(cfg.act)(x @ p["w_up"])
+    if policy is not None:
+        # inside the TP region the seq dim is gathered (SP applies only to
+        # the residual stream), hidden is sharded over the model axis
+        if x.ndim == 3:
+            h = policy.constrain(h, "batch", None, "ff")
+        else:
+            h = policy.constrain(h, "batch", "ff")
+    return h @ p["w_down"]
+
+
+def init_dense_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": jax.random.normal(k1, (d_model, d_ff), dtype) * scale_in,
+        "w_down": jax.random.normal(k2, (d_ff, d_model), dtype) * scale_out,
+    }
+    if act == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * scale_in
+    return p
+
+
+def mlp_specs(cfg: ModelConfig) -> dict:
+    s = {"w_up": (None, "ff"), "w_down": ("ff", None)}
+    if cfg.act == "swiglu":
+        s["w_gate"] = (None, "ff")
+    return s

@@ -1,0 +1,316 @@
+"""LM wrapper: embedding, stack, vocab-parallel chunked cross-entropy,
+train/prefill/decode entry points, and ``input_specs`` for the dry-run.
+
+The 256k-vocab architectures make global logits [B,S,V] untenable; the loss
+is computed Megatron-style inside ``shard_map``: local [*,V/tp] logits per
+sequence chunk, global log-sum-exp via psum, logits never materialized.
+This is a *Remove Header / Scatter Data* composition in JingZhao terms: the
+vocab dimension is scattered across the model axis and only 8-byte-per-token
+metadata (lse, target logit) crosses shards.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map as _shard_map
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_rep=False):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_rep)
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import rms_norm
+from repro.sharding.policy import Policy
+
+CE_CHUNK = 512
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key, dtype=None, tp: int = 1) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, V = cfg.d_model, cfg.vocab_size
+    params = {
+        "embed": jax.random.normal(k1, (V, d), dtype) * 0.02,
+        "stack": tf.init_stack(k2, cfg, dtype, tp=tp),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(k3, (d, V), dtype) / math.sqrt(d)
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "embed": ("vocab", None),
+        "stack": tf.stack_specs(cfg),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = (None, "vocab")
+    return s
+
+
+def abstract_params(cfg: ModelConfig, tp: int = 1):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), tp=tp))
+
+
+# --------------------------------------------------------------------------
+# vocab-parallel embedding / loss
+# --------------------------------------------------------------------------
+
+def _embed_plain(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def embed(table, ids, policy: Policy):
+    """ids [...]-> [..., D]; vocab-parallel under a mesh.
+
+    The table enters fsdp-sharded (vocab x data); the body all-gathers the
+    d_model dim explicitly — letting GSPMD reshard instead was measured to
+    replicate-then-partition (full-table f32 copies). The gather's
+    transpose is a reduce-scatter, which is exactly the FSDP grad flow.
+    """
+    if policy.mesh is None:
+        return _embed_plain(table, ids)
+    dp = policy.dp_axes
+    tp = policy.tp_axis
+    fsdp_ax = "data" if "data" in policy.mesh.axis_names else None
+    d_model = table.shape[1]
+    use_fsdp = (policy.rules.get("fsdp_params", False)
+                and fsdp_ax is not None
+                and d_model % policy.axis_size(fsdp_ax) == 0)
+
+    def body(tbl, ids_loc):
+        if use_fsdp:
+            tbl = jax.lax.all_gather(tbl, fsdp_ax, axis=1, tiled=True)
+        vloc = tbl.shape[0]
+        start = jax.lax.axis_index(tp) * vloc
+        loc = ids_loc - start
+        ok = (loc >= 0) & (loc < vloc)
+        out = jnp.where(ok[..., None],
+                        jnp.take(tbl, jnp.clip(loc, 0, vloc - 1), axis=0),
+                        jnp.zeros((), tbl.dtype))
+        return jax.lax.psum(out, tp)
+
+    nd = ids.ndim
+    return shard_map(
+        body, mesh=policy.mesh,
+        in_specs=(P(tp, fsdp_ax if use_fsdp else None),
+                  P(dp, *([None] * (nd - 1)))),
+        out_specs=P(dp, *([None] * nd)),
+        check_rep=False,
+    )(table, ids)
+
+
+def head_logits(x, head_w, policy: Policy):
+    """x [B,D] (decode) -> logits [B,V] (vocab-sharded under mesh)."""
+    logits = x @ head_w
+    if policy.mesh is not None:
+        logits = policy.constrain(logits, "batch", "vocab")
+    return logits
+
+
+def _ce_from_logits(logits, targets):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - tgt
+
+
+def chunked_ce_loss(x, head_w, targets, mask, policy: Policy,
+                    chunk: int = CE_CHUNK):
+    """Mean CE over masked tokens. x: [B,S,D]; targets/mask: [B,S]."""
+    B, S, D = x.shape
+    if policy.mesh is None:
+        per_tok = _ce_from_logits(x @ head_w, targets)
+        return jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    dp, tp = policy.dp_axes, policy.tp_axis
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    fsdp_ax = "data" if "data" in policy.mesh.axis_names else None
+    use_fsdp = (policy.rules.get("fsdp_params", False)
+                and fsdp_ax is not None
+                and head_w.shape[0] % policy.axis_size(fsdp_ax) == 0)
+
+    def body(x_loc, w_loc, tgt_loc, mask_loc):
+        # x_loc: [b,S,D]; w_loc: [D/fsdp,V/tp] -> gathered [D,V/tp]
+        if use_fsdp:
+            w_loc = jax.lax.all_gather(w_loc, fsdp_ax, axis=0, tiled=True)
+        vloc = w_loc.shape[1]
+        v0 = jax.lax.axis_index(tp) * vloc
+        b = x_loc.shape[0]
+        if pad:
+            x_loc = jnp.pad(x_loc, ((0, 0), (0, pad), (0, 0)))
+            tgt_loc = jnp.pad(tgt_loc, ((0, 0), (0, pad)))
+            mask_loc = jnp.pad(mask_loc, ((0, 0), (0, pad)))
+        nc = (S + pad) // chunk
+        xc = x_loc.reshape(b, nc, chunk, D).transpose(1, 0, 2, 3)
+        tc = tgt_loc.reshape(b, nc, chunk).transpose(1, 0, 2)
+        mc = mask_loc.reshape(b, nc, chunk).transpose(1, 0, 2)
+        # keep the scan xs in bf16: without the barrier XLA-CPU pushes the
+        # f32 dot-input convert above the loop (full-sequence f32 copies)
+        xc = jax.lax.optimization_barrier(xc)
+
+        @jax.checkpoint
+        def chunk_fn(carry, xs):
+            xcu, tcu, mcu = xs
+            logits = (xcu @ w_loc).astype(jnp.float32)      # [b,C,V/tp]
+            lmax = jax.lax.pmax(
+                jax.lax.stop_gradient(jnp.max(logits, axis=-1)), tp)
+            se = jnp.sum(jnp.exp(logits - lmax[..., None]), axis=-1)
+            lse = jnp.log(jax.lax.psum(se, tp)) + lmax
+            loc = tcu - v0
+            ok = (loc >= 0) & (loc < vloc)
+            tl = jnp.take_along_axis(
+                logits, jnp.clip(loc, 0, vloc - 1)[..., None], axis=-1)[..., 0]
+            tl = jax.lax.psum(jnp.where(ok, tl, 0.0), tp)
+            per_tok = (lse - tl) * mcu
+            return (carry[0] + jnp.sum(per_tok), carry[1] + jnp.sum(mcu)), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xc, tc, mc))
+        tot = jax.lax.psum(tot, dp)
+        cnt = jax.lax.psum(cnt, dp)
+        return (tot / jnp.maximum(cnt, 1.0))[None]
+
+    loss = shard_map(
+        body, mesh=policy.mesh,
+        in_specs=(P(dp, None, None),
+                  P(fsdp_ax if use_fsdp else None, tp),
+                  P(dp, None), P(dp, None)),
+        out_specs=P(None),
+        check_rep=False,
+    )(x, head_w, targets, mask.astype(jnp.float32))
+    return loss[0]
+
+
+# --------------------------------------------------------------------------
+# model entry points
+# --------------------------------------------------------------------------
+
+def _head_weight(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def forward_loss(params, tokens, cfg: ModelConfig, policy: Policy,
+                 remat: bool = True) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Next-token CE loss. tokens: [B,S] int32."""
+    x = embed(params["embed"], tokens, policy)
+    ctx = {"mode": "train", "remat": remat}
+    x, _, stats = tf.apply_stack(params["stack"], x, cfg, policy, ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:]), jnp.zeros_like(tokens[:, :1])],
+        axis=1).astype(jnp.float32)
+    ce = chunked_ce_loss(x, _head_weight(params, cfg), targets, mask, policy)
+    loss = ce
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * stats["moe_aux"]
+    metrics = {"ce": ce, **stats}
+    return loss, metrics
+
+
+def prefill(params, tokens, cfg: ModelConfig, policy: Policy,
+            cache_len: Optional[int] = None):
+    """Build caches for `tokens` [B,S]; returns (last_logits [B,V], state)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, policy)
+    ctx = {"mode": "prefill", "cache_len": cache_len or S}
+    x, caches, _ = tf.apply_stack(params["stack"], x, cfg, policy, ctx,
+                                  want_caches=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = head_logits(x[:, -1], _head_weight(params, cfg), policy)
+    state = {
+        "caches": caches,
+        "lengths": jnp.full((B,), S, jnp.int32),
+        "positions": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, state
+
+
+def decode_step(params, tokens, state, cfg: ModelConfig, policy: Policy,
+                active=None):
+    """One decode step. tokens: [B] int32. Returns (logits [B,V], state).
+
+    `active` [B] bool (optional): parked sequences (VoQ miss handling in
+    the serving engine) keep their caches/counters frozen.
+    """
+    x = embed(params["embed"], tokens[:, None], policy)[:, 0]
+    ctx = {"mode": "decode",
+           "positions": state["positions"],
+           "lengths": state["lengths"],
+           "active": active}
+    x, caches, _ = tf.apply_stack(params["stack"], x, cfg, policy, ctx,
+                                  caches=state["caches"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = head_logits(x, _head_weight(params, cfg), policy)
+    # per-layer attention paths clamp effective lengths to their own cache
+    # size (ring buffers clamp to the window), so the global counters just
+    # advance monotonically.
+    adv = 1 if active is None else active.astype(jnp.int32)
+    new_state = {
+        "caches": caches,
+        "lengths": state["lengths"] + adv,
+        "positions": state["positions"] + adv,
+    }
+    return logits, new_state
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=None, filled: bool = True, tp: int = 1) -> dict:
+    """Fresh (or 'already full', for dry-runs) decoding state."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    caches = tf.init_stack_caches(cfg, batch, cache_len, dtype, tp=tp)
+    fill = cache_len if filled else 0
+    return {
+        "caches": caches,
+        "lengths": jnp.full((batch,), fill, jnp.int32),
+        "positions": jnp.full((batch,), fill, jnp.int32),
+    }
+
+
+def serve_state_specs(cfg: ModelConfig) -> dict:
+    return {
+        "caches": tf.stack_cache_specs(cfg),
+        "lengths": ("batch",),
+        "positions": ("batch",),
+    }
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape, tp: int = 1) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the given shape.
+
+    Modality frontends (VQ-GAN for chameleon, EnCodec for musicgen) are
+    stubs: they produce the discrete token streams these specs describe.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "decode":
+        state = jax.eval_shape(
+            lambda: init_serve_state(cfg, B, S, tp=tp))
+        return {"tokens": jax.ShapeDtypeStruct((B,), i32), "state": state}
+    raise ValueError(shape.kind)

@@ -1,0 +1,182 @@
+"""Mamba (S6) block — chunked selective scan, TPU-adapted.
+
+Hardware adaptation (DESIGN.md §2): the CUDA selective-scan kernel is a
+sequential SRAM-resident recurrence; on TPU we restructure it as a *chunked*
+scan — an outer ``lax.scan`` over sequence chunks carrying the [B, Di, N]
+state, with a log-depth associative scan inside each chunk. All inner math is
+vectorized over (chunk, d_inner, state) so it maps onto the VPU/MXU instead
+of emulating per-timestep control flow. The Pallas `linear_scan` kernel
+implements the same recurrence for the hot decode path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    di = m.expand * d
+    dtr = m.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(di)
+    A = jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (m.d_conv, di), dtype) * 0.5,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * m.d_state), dtype) * si,
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype) / math.sqrt(dtr),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "A_log": jnp.log(A),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), dtype) * si,
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": (None, "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"),
+        "dt_bias": ("inner",),
+        "A_log": ("inner", None),
+        "D_skip": ("inner",),
+        "out_proj": ("inner", None),
+    }
+
+
+def _causal_conv(xm, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv via K shifted adds. xm: [B,S,Di]; conv_w: [K,Di]."""
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xm.shape[0], K - 1, xm.shape[2]), xm.dtype)
+    else:
+        pad = conv_state                                  # [B,K-1,Di]
+    xp = jnp.concatenate([pad, xm], axis=1)               # [B,S+K-1,Di]
+    out = conv_b[None, None]
+    S = xm.shape[1]
+    for k in range(K):
+        out = out + conv_w[k][None, None] * xp[:, k: k + S]
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out, new_state
+
+
+def _chunk_scan(dA_log, dBx, h0):
+    """Associative scan of h_t = exp(dA_log_t) h_{t-1} + dBx_t within a chunk.
+
+    dA_log, dBx: [B,C,Di,N]; h0: [B,Di,N]. Returns h_all [B,C,Di,N], h_last.
+    """
+    def combine(a, b):
+        (la, xa), (lb, xb) = a, b
+        return la + lb, xa * jnp.exp(lb) + xb
+    lw, hs = jax.lax.associative_scan(combine, (dA_log, dBx), axis=1)
+    h_all = hs + jnp.exp(lw) * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_forward(x, p, cfg: ModelConfig, policy, chunk: int = 256,
+                  state: Optional[dict] = None, want_state: bool = False):
+    """x: [B,S,D] -> [B,S,D]; optional recurrent state carry (for decode-prefill)."""
+    m = cfg.mamba
+    B, S, D = x.shape
+    di = m.expand * D
+    dtr = m.resolved_dt_rank(D)
+    xz = x @ p["in_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    if policy is not None:
+        xm = policy.constrain(xm, "batch", None, "inner")
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    xdbl = xc @ p["x_proj"]
+    dt_r = xdbl[..., :dtr]
+    B_ssm = xdbl[..., dtr: dtr + m.d_state].astype(jnp.float32)
+    C_ssm = xdbl[..., dtr + m.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"][None, None])
+    dt = dt.astype(jnp.float32)                           # [B,S,Di]
+    A = -jnp.exp(p["A_log"])                              # [Di,N] fp32
+    xcf = xc.astype(jnp.float32)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xcf = jnp.pad(xcf, ((0, 0), (0, pad), (0, 0)))
+        B_ssm = jnp.pad(B_ssm, ((0, 0), (0, pad), (0, 0)))
+        C_ssm = jnp.pad(C_ssm, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+
+    def c(t, *axes):
+        return policy.constrain(t, *axes) if policy is not None else t
+
+    dtc = c(dt.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3),
+            None, "batch", None, "inner")
+    xcc = c(xcf.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3),
+            None, "batch", None, "inner")
+    Bc = c(B_ssm.reshape(B, nc, chunk, m.d_state).transpose(1, 0, 2, 3),
+           None, "batch", None, None)
+    Cc = c(C_ssm.reshape(B, nc, chunk, m.d_state).transpose(1, 0, 2, 3),
+           None, "batch", None, None)
+
+    h0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, di, m.d_state), jnp.float32))
+    h0 = c(h0, "batch", "inner", None)
+
+    @jax.checkpoint  # recompute per-chunk internals in backward: the
+    def body(h, xs):  # [B,C,Di,N] intra-chunk tensors never persist
+        dt_i, x_i, B_i, C_i = xs                          # [B,C,Di],[B,C,Di],[B,C,N]
+        dA_log = c(dt_i[..., None] * A[None, None],
+                   "batch", None, "inner", None)          # [B,C,Di,N]
+        dBx = c((dt_i * x_i)[..., None] * B_i[:, :, None, :],
+                "batch", None, "inner", None)
+        h_all, h_last = _chunk_scan(dA_log, dBx, h)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, C_i)       # [B,C,Di]
+        return c(h_last, "batch", "inner", None), y
+
+    h_last, ys = jax.lax.scan(body, h0, (dtc, xcc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * chunk, di)[:, :S]
+    y = y + xcf[:, :S] * p["D_skip"][None, None]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    new_state = None
+    if want_state:
+        new_state = {"conv": new_conv, "ssm": h_last.astype(jnp.float32)}
+    return y, new_state
+
+
+def mamba_decode(x, p, cfg: ModelConfig, state: dict, policy):
+    """Single-token step. x: [B,D]; state {conv: [B,K-1,Di], ssm: [B,Di,N]}."""
+    m = cfg.mamba
+    B, D = x.shape
+    di = m.expand * D
+    dtr = m.resolved_dt_rank(D)
+    xz = x @ p["in_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"]                            # [B,K-1,Di]
+    window = jnp.concatenate([conv_state, xm[:, None]], axis=1)   # [B,K,Di]
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"][None]
+    xc = jax.nn.silu(xc)
+    xdbl = xc @ p["x_proj"]
+    dt_r = xdbl[..., :dtr]
+    B_ssm = xdbl[..., dtr: dtr + m.d_state].astype(jnp.float32)
+    C_ssm = xdbl[..., dtr + m.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"][None]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    h = state["ssm"]
+    dA = jnp.exp(dt[..., None] * A[None])                 # [B,Di,N]
+    h = dA * h + (dt * xc.astype(jnp.float32))[..., None] * B_ssm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm) + xc.astype(jnp.float32) * p["D_skip"][None]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    new_state = {"conv": window[:, 1:], "ssm": h}
+    return y, new_state

@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with absorbed decode path.
+
+Train/prefill: the latent KV is expanded to per-head K/V and fed through the
+same chunked flash attention as GQA. Decode: the W^UK projection is absorbed
+into the query so attention runs directly in latent space — the cache holds
+only [lora + rope] per token (the paper's motivation: a small "resource"
+footprint per connection, cf. JingZhao's 416-bit QPC).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import chunked_causal_attention, decode_attention
+from repro.models.layers import apply_rope, rms_norm
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qdim = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    sl = 1.0 / math.sqrt(m.kv_lora_rank)
+    return {
+        "wq": jax.random.normal(ks[0], (d, H * qdim), dtype) * s,
+        "wkv_a": jax.random.normal(ks[1], (d, m.kv_lora_rank + m.qk_rope_dim), dtype) * s,
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": jax.random.normal(
+            ks[2], (m.kv_lora_rank, H * (m.qk_nope_dim + m.v_head_dim)), dtype) * sl,
+        "wo": jax.random.normal(ks[3], (H * m.v_head_dim, d), dtype)
+              * (1.0 / math.sqrt(H * m.v_head_dim)),
+    }
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    return {
+        "wq": (None, "heads"),
+        "wkv_a": (None, None),
+        "kv_norm": (None,),
+        "wkv_b": ("lora", "heads"),
+        "wo": ("heads", None),
+    }
+
+
+def _split_q(q, cfg):
+    m = cfg.mla
+    B, S, _ = q.shape
+    q = q.reshape(B, S, cfg.n_heads, m.qk_nope_dim + m.qk_rope_dim)
+    return q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+
+def mla_prefill(x, p, cfg: ModelConfig, angles, policy,
+                want_cache: bool = False):
+    """x: [B,S,D]. Returns (out, cache|None); cache = (c_kv, k_rope)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _split_q(x @ p["wq"], cfg)
+    q_rope = apply_rope(q_rope, angles)
+    kv_a = x @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., None, m.kv_lora_rank:], angles)  # [B,S,1,rope]
+    kv = c_kv @ p["wkv_b"]
+    kv = kv.reshape(B, S, H, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    out = chunked_causal_attention(q, k, v, policy=policy, scale=scale)
+    out = out.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    cache = ({"c_kv": c_kv, "k_rope": k_rope[..., 0, :]}
+             if want_cache else None)
+    return out, cache
+
+
+def mla_decode(x, p, cfg: ModelConfig, cache, positions, policy):
+    """x: [B,D] one token; cache=(c_kv [B,Smax,lora], k_rope [B,Smax,rope]).
+
+    Absorbed attention: scores and values computed in latent space.
+    """
+    m = cfg.mla
+    B, _ = x.shape
+    H = cfg.n_heads
+    c_cache, r_cache = cache["c_kv"], cache["k_rope"]
+    lengths = cache["length"]                         # [B]
+    from repro.models.layers import rope_angles
+    ang = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)  # [B, rope/2]
+    q = (x @ p["wq"]).reshape(B, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope[:, None], ang[:, None])[:, 0]     # [B,H,rope]
+    kv_a = x @ p["wkv_a"]
+    c_new = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    r_new = apply_rope(kv_a[:, None, None, m.kv_lora_rank:], ang[:, None])[:, 0, 0]
+    # write into cache at `positions`
+    bidx = jnp.arange(B)
+    c_cache = c_cache.at[bidx, positions].set(c_new.astype(c_cache.dtype))
+    r_cache = r_cache.at[bidx, positions].set(r_new.astype(r_cache.dtype))
+    lengths = jnp.maximum(lengths, positions + 1)
+    # absorb W^UK into q:  q_lat[b,h,l] = sum_n q_nope[b,h,n] wk[l,h,n]
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
+    w_k, w_v = wkv_b[..., : m.qk_nope_dim], wkv_b[..., m.qk_nope_dim:]
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope, w_k)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = (jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32),
+                    c_cache.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                      r_cache.astype(jnp.float32))) * scale
+    valid = jnp.arange(c_cache.shape[1])[None] < lengths[:, None]
+    s = jnp.where(valid[:, None], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", prob.astype(c_cache.dtype), c_cache,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhl,lhv->bhv", o_lat.astype(x.dtype), w_v)
+    out = out.reshape(B, H * m.v_head_dim) @ p["wo"]
+    new_cache = {"c_kv": c_cache, "k_rope": r_cache, "length": lengths}
+    return out, new_cache

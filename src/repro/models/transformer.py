@@ -1,0 +1,494 @@
+"""Block assembly: per-layer mixers + MLPs, stacked with a grouped lax.scan.
+
+A model is (prefix blocks) + (n_groups × repeating unit). The repeating unit
+covers heterogeneous interleaves (Jamba: 8 sublayers — 7 mamba + 1 attention,
+MoE every other) with one scan whose ``known_trip_count`` the roofline walker
+multiplies through. Each block is a JingZhao pipeline: norm → mixer PPU →
+residual → norm → MLP PPU → residual; mixers/MLPs are swappable
+(Semantics Subsystem) without touching the runtime.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mla as mla_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.attention import (chunked_causal_attention, decode_attention)
+from repro.models.layers import (apply_rope, dense_mlp, init_dense_mlp,
+                                 mlp_specs, rms_norm, rope_angles)
+
+
+# --------------------------------------------------------------------------
+# layer plan
+# --------------------------------------------------------------------------
+
+def plan_layers(cfg: ModelConfig) -> Tuple[List, List, int]:
+    """Return (prefix pairs, unit pairs, n_groups) of (kind, mlp_kind)."""
+    pairs = list(zip(cfg.layer_kinds(), cfg.mlp_kinds()))
+    for prefix in (0, 1, 2):
+        rest = pairs[prefix:]
+        if not rest:
+            continue
+        for p in (1, 2, 4, 8):
+            if len(rest) % p:
+                continue
+            unit = rest[:p]
+            if all(rest[i] == unit[i % p] for i in range(len(rest))):
+                return pairs[:prefix], unit, len(rest) // p
+    # fallback: fully unrolled prefix
+    return pairs, [], 0
+
+
+# --------------------------------------------------------------------------
+# attention block (GQA / MHA, optional bias, qk-norm, SWA)
+# --------------------------------------------------------------------------
+
+def eff_heads(cfg: ModelConfig, tp: int = 1) -> Tuple[int, int]:
+    """(H_eff, KV_eff) after TP alignment.
+
+    When n_kv_heads < tp and tp % n_kv_heads == 0, KV heads are *duplicated*
+    (Megatron convention — a checkpoint loader tiles the kv projections);
+    when heads don't divide tp they are zero-padded up to a multiple. This
+    keeps every head dim exactly divisible by the model axis, avoiding
+    GSPMD uneven-shard resharding pathologies (DESIGN.md §7).
+    """
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    if tp <= 1:
+        return H, KV
+    H_eff = -(-H // tp) * tp
+    if KV < tp and tp % KV == 0 and H_eff == H:
+        KV_eff = tp
+    else:
+        KV_eff = -(-KV // tp) * tp
+    # grouping must stay integral
+    if H_eff % KV_eff:
+        KV_eff = H_eff
+    return H_eff, KV_eff
+
+
+def _init_attn(key, cfg: ModelConfig, dtype, tp: int = 1) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = eff_heads(cfg, tp)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, KV * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, KV * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (H * hd, d), dtype)
+              * (1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _attn_specs(cfg: ModelConfig) -> dict:
+    s = {"wq": (None, "heads"), "wk": (None, "kv_heads"),
+         "wv": (None, "kv_heads"), "wo": ("heads", None)}
+    if cfg.qkv_bias:
+        s.update(bq=("heads",), bk=("kv_heads",), bv=("kv_heads",))
+    if cfg.qk_norm:
+        s.update(q_norm=(None,), k_norm=(None,))
+    return s
+
+
+def _qkv(x, p, cfg):
+    """x: [..., D] -> q [..., H, hd], k/v [..., KV, hd] (normed, no rope).
+
+    Effective head counts are derived from the parameter shapes so the same
+    code serves tp=1 smoke configs and TP-padded production configs.
+    """
+    hd = cfg.head_dim
+    H = p["wq"].shape[1] // hd
+    KV = p["wk"].shape[1] // hd
+    q = x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)
+    k = x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0)
+    v = x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0)
+    q = q.reshape(*x.shape[:-1], H, hd)
+    k = k.reshape(*x.shape[:-1], KV, hd)
+    v = v.reshape(*x.shape[:-1], KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_forward(x, p, cfg: ModelConfig, policy, ctx,
+                 want_cache: bool = False):
+    """Train/prefill attention. x: [B,S,D]."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(x, p, cfg)
+    angles = rope_angles(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, angles)
+    k = apply_rope(k, angles)
+    out = chunked_causal_attention(
+        q, k, v, chunk=ctx.get("attn_chunk", 1024),
+        window=cfg.swa_window, policy=policy)
+    out = out.reshape(B, S, -1) @ p["wo"]
+    cache = None
+    if want_cache:
+        if cfg.swa_window and S >= cfg.swa_window:
+            W = cfg.swa_window
+            # ring layout: slot t%W holds token t; for S>=W keep last W
+            shift = S % W
+            k_ring = jnp.roll(k[:, -W:], shift, axis=1)
+            v_ring = jnp.roll(v[:, -W:], shift, axis=1)
+            cache = {"k": k_ring, "v": v_ring}
+        else:
+            Smax = ctx.get("cache_len", S)
+            padw = ((0, 0), (0, Smax - S), (0, 0), (0, 0))
+            cache = {"k": jnp.pad(k, padw), "v": jnp.pad(v, padw)}
+    return out, cache
+
+
+def attn_decode(x, p, cfg: ModelConfig, policy, ctx, cache):
+    """x: [B,D]; cache {k,v: [B,Smax,KV,hd]}; ctx has positions/lengths [B]."""
+    B, _ = x.shape
+    positions, lengths = ctx["positions"], ctx["lengths"]
+    q, k_new, v_new = _qkv(x, p, cfg)                  # [B,H,hd],[B,KV,hd]
+    ang = rope_angles(positions, cfg.head_dim, cfg.rope_theta)  # [B, hd/2]
+    q = apply_rope(q[:, None], ang[:, None])[:, 0]
+    k_new = apply_rope(k_new[:, None], ang[:, None])[:, 0]
+    W = cfg.swa_window
+    Smax = cache["k"].shape[1]
+    slot = positions % Smax if W else jnp.minimum(positions, Smax - 1)
+    bidx = jnp.arange(B)
+    k_c = cache["k"].at[bidx, slot].set(k_new.astype(cache["k"].dtype))
+    v_c = cache["v"].at[bidx, slot].set(v_new.astype(cache["v"].dtype))
+    eff_len = jnp.minimum(lengths + 1, Smax)
+    out = decode_attention(q, k_c, v_c, eff_len, policy=policy)
+    out = out.reshape(B, -1) @ p["wo"]
+    return out, {"k": k_c, "v": v_c}
+
+
+# --------------------------------------------------------------------------
+# block init / specs / apply
+# --------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str, mlp_kind: str, dtype,
+               tp: int = 1) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": jnp.ones((d,), dtype),
+                         "norm2": jnp.ones((d,), dtype)}
+    if kind == "attn":
+        p["attn"] = (mla_mod.init_mla(k1, cfg, dtype) if cfg.mla is not None
+                     else _init_attn(k1, cfg, dtype, tp=tp))
+    elif kind == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(k1, cfg, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = rwkv_mod.init_rwkv(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind != "rwkv":
+        if mlp_kind == "dense":
+            d_ff = cfg.d_ff
+            p["mlp"] = init_dense_mlp(k2, d, d_ff, cfg.act, dtype)
+        elif mlp_kind == "moe":
+            p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+        else:
+            raise ValueError(mlp_kind)
+    return p
+
+
+def block_specs(cfg: ModelConfig, kind: str, mlp_kind: str) -> dict:
+    s: Dict[str, Any] = {"norm1": (None,), "norm2": (None,)}
+    if kind == "attn":
+        s["attn"] = (mla_mod.mla_specs(cfg) if cfg.mla is not None
+                     else _attn_specs(cfg))
+    elif kind == "mamba":
+        s["mamba"] = mamba_mod.mamba_specs(cfg)
+    elif kind == "rwkv":
+        s["rwkv"] = rwkv_mod.rwkv_specs(cfg)
+    if kind != "rwkv":
+        s["mlp" if mlp_kind == "dense" else "moe"] = (
+            mlp_specs(cfg) if mlp_kind == "dense" else moe_mod.moe_specs(cfg))
+    return s
+
+
+def _zero_stats():
+    return {"moe_aux": jnp.zeros((), jnp.float32),
+            "moe_dropped": jnp.zeros((), jnp.float32)}
+
+
+def apply_block(p, x, kind: str, mlp_kind: str, cfg: ModelConfig, policy,
+                ctx, cache=None, want_cache: bool = False):
+    """Returns (x, new_cache, stats). Train mode: cache=None, want_cache=False."""
+    mode = ctx["mode"]
+    stats = _zero_stats()
+    if policy is not None and mode != "decode":
+        x = policy.constrain(x, "batch", "act_seq", None)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache = None
+    if kind == "attn":
+        if cfg.mla is not None:
+            if mode == "decode":
+                a, new_cache = _mla_decode_wrap(h, p["attn"], cfg, ctx, cache, policy)
+            else:
+                angles = rope_angles(jnp.arange(x.shape[1]),
+                                     cfg.mla.qk_rope_dim, cfg.rope_theta)
+                a, new_cache = mla_mod.mla_prefill(
+                    h, p["attn"], cfg, angles, policy, want_cache=want_cache)
+                if new_cache is not None:
+                    pad = ctx.get("cache_len", x.shape[1]) - x.shape[1]
+                    if pad > 0:
+                        new_cache = {
+                            k2: jnp.pad(v2, ((0, 0), (0, pad), (0, 0)))
+                            for k2, v2 in new_cache.items()}
+        else:
+            if mode == "decode":
+                a, new_cache = attn_decode(h, p["attn"], cfg, policy, ctx, cache)
+            else:
+                a, new_cache = attn_forward(h, p["attn"], cfg, policy, ctx,
+                                            want_cache=want_cache)
+    elif kind == "mamba":
+        if mode == "decode":
+            a, new_cache = mamba_mod.mamba_decode(h, p["mamba"], cfg, cache, policy)
+        else:
+            a, new_cache = mamba_mod.mamba_forward(
+                h, p["mamba"], cfg, policy, state=cache,
+                want_state=want_cache)
+    elif kind == "rwkv":
+        if mode == "decode":
+            a, tm_state = rwkv_mod.rwkv_time_mix_decode(h, p["rwkv"], cfg,
+                                                        {k: cache[k] for k in
+                                                         ("wkv", "shift_tm")})
+        else:
+            a, tm_state = rwkv_mod.rwkv_time_mix(h, p["rwkv"], cfg, policy,
+                                                 state=cache,
+                                                 want_state=want_cache)
+    else:
+        raise ValueError(kind)
+    x = x + a
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if kind == "rwkv":
+        if mode == "decode":
+            m, cm_state = rwkv_mod.rwkv_channel_mix_decode(
+                h2, p["rwkv"], cfg, {"shift_cm": cache["shift_cm"]})
+        else:
+            m, cm_state = rwkv_mod.rwkv_channel_mix(
+                h2, p["rwkv"], cfg, policy,
+                state=cache, want_state=want_cache)
+        if tm_state is not None or cm_state is not None:
+            new_cache = {**(tm_state or {}), **(cm_state or {})}
+    elif mlp_kind == "dense":
+        m = dense_mlp(h2, p["mlp"], cfg, policy)
+    else:
+        if mode == "decode":
+            # group decode tokens so groups shard over the data axes
+            B = h2.shape[0]
+            dp = policy.dp_size if policy is not None else 1
+            gdim = dp if (dp > 1 and B % dp == 0) else 1
+            m3, st = moe_mod.moe_mlp(h2.reshape(gdim, B // gdim, -1),
+                                     p["moe"], cfg, policy,
+                                     capacity_factor=2.0)
+            m = m3.reshape(B, -1)
+        else:
+            m, st = moe_mod.moe_mlp(h2, p["moe"], cfg, policy)
+        stats = {**stats, **{k: v for k, v in st.items()}}
+    x = x + m
+    if policy is not None and mode != "decode":
+        x = policy.constrain(x, "batch", "act_seq", None)
+    if mode == "decode" and ctx.get("active") is not None and cache is not None \
+            and new_cache is not None:
+        # VoQ parking: frozen (parked) sequences keep their old state; only
+        # active connections advance (paper §4.1.1 per-connection blocking)
+        act = ctx["active"]
+
+        def sel(n, o):
+            a = act.reshape((act.shape[0],) + (1,) * (n.ndim - 1))
+            return jnp.where(a, n, o)
+
+        new_cache = jax.tree.map(sel, new_cache, cache)
+    return x, new_cache, stats
+
+
+def _mla_decode_wrap(h, p, cfg, ctx, cache, policy):
+    full = {"c_kv": cache["c_kv"], "k_rope": cache["k_rope"],
+            "length": jnp.minimum(ctx["lengths"] + 1,
+                                  cache["c_kv"].shape[1])}
+    out, new = mla_mod.mla_decode(h, p, cfg, full, ctx["positions"], policy)
+    return out, {"c_kv": new["c_kv"], "k_rope": new["k_rope"]}
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     dtype, tp: int = 1) -> Optional[dict]:
+    d, hd = cfg.d_model, cfg.head_dim
+    _, KV = eff_heads(cfg, tp)
+    if kind == "attn":
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_dim), dtype)}
+        S = min(cfg.swa_window, cache_len) if cfg.swa_window else cache_len
+        return {"k": jnp.zeros((batch, S, KV, hd), dtype),
+                "v": jnp.zeros((batch, S, KV, hd), dtype)}
+    if kind == "mamba":
+        m = cfg.mamba
+        di = m.expand * d
+        return {"conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+                "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32)}
+    if kind == "rwkv":
+        H = d // cfg.rwkv.head_dim
+        hd_r = cfg.rwkv.head_dim
+        return {"wkv": jnp.zeros((batch, H, hd_r, hd_r), jnp.float32),
+                "shift_tm": jnp.zeros((batch, d), dtype),
+                "shift_cm": jnp.zeros((batch, d), dtype)}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, kind: str) -> Optional[dict]:
+    """Logical sharding axes for each cache leaf."""
+    if kind == "attn":
+        if cfg.mla is not None:
+            # the latent cache has no head dim to shard; store it sharded
+            # over the model axis along seq (gathered by the absorbed
+            # attention's psum'd score reduction)
+            return {"c_kv": ("batch", "mla_seq", None),
+                    "k_rope": ("batch", "mla_seq", None)}
+        return {"k": ("batch", "kv_seq", "kv_heads", None),
+                "v": ("batch", "kv_seq", "kv_heads", None)}
+    if kind == "mamba":
+        return {"conv": ("batch", None, "inner"),
+                "ssm": ("batch", "inner", None)}
+    if kind == "rwkv":
+        return {"wkv": ("batch", "inner", None, None),
+                "shift_tm": ("batch", None), "shift_cm": ("batch", None)}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# full stack: prefix + scanned groups
+# --------------------------------------------------------------------------
+
+def init_stack(key, cfg: ModelConfig, dtype, tp: int = 1) -> dict:
+    prefix, unit, n_groups = plan_layers(cfg)
+    keys = jax.random.split(key, len(prefix) + max(n_groups, 1) * max(len(unit), 1))
+    params: Dict[str, Any] = {"prefix": [], "groups": None}
+    ki = 0
+    for kind, mlp in prefix:
+        params["prefix"].append(init_block(keys[ki], cfg, kind, mlp, dtype, tp))
+        ki += 1
+    if n_groups:
+        groups = []
+        for g in range(n_groups):
+            gp = {}
+            for j, (kind, mlp) in enumerate(unit):
+                gp[f"b{j}"] = init_block(keys[ki], cfg, kind, mlp, dtype, tp)
+                ki += 1
+            groups.append(gp)
+        params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    return params
+
+
+def stack_specs(cfg: ModelConfig) -> dict:
+    prefix, unit, n_groups = plan_layers(cfg)
+    s: Dict[str, Any] = {"prefix": [], "groups": None}
+    for kind, mlp in prefix:
+        s["prefix"].append(block_specs(cfg, kind, mlp))
+    if n_groups:
+        gp = {}
+        for j, (kind, mlp) in enumerate(unit):
+            # stacked leaves gain a leading (unsharded) group axis
+            gp[f"b{j}"] = jax.tree.map(
+                lambda axes: (None,) + axes, block_specs(cfg, kind, mlp),
+                is_leaf=lambda v: isinstance(v, tuple) and all(
+                    a is None or isinstance(a, str) for a in v))
+        s["groups"] = gp
+    return s
+
+
+def init_stack_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype,
+                      tp: int = 1) -> dict:
+    prefix, unit, n_groups = plan_layers(cfg)
+    caches: Dict[str, Any] = {"prefix": [], "groups": None}
+    for kind, _ in prefix:
+        caches["prefix"].append(
+            init_block_cache(cfg, kind, batch, cache_len, dtype, tp))
+    if n_groups:
+        one = {f"b{j}": init_block_cache(cfg, kind, batch, cache_len, dtype, tp)
+               for j, (kind, _) in enumerate(unit)}
+        caches["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
+    return caches
+
+
+def stack_cache_specs(cfg: ModelConfig) -> dict:
+    prefix, unit, n_groups = plan_layers(cfg)
+    s: Dict[str, Any] = {"prefix": [], "groups": None}
+    for kind, _ in prefix:
+        s["prefix"].append(cache_specs(cfg, kind))
+    if n_groups:
+        s["groups"] = {
+            f"b{j}": jax.tree.map(
+                lambda axes: (None,) + axes, cache_specs(cfg, kind),
+                is_leaf=lambda v: isinstance(v, tuple) and all(
+                    a is None or isinstance(a, str) for a in v))
+            for j, (kind, _) in enumerate(unit)}
+    return s
+
+
+def apply_stack(params, x, cfg: ModelConfig, policy, ctx,
+                caches=None, want_caches: bool = False):
+    """Run all blocks. Returns (x, new_caches, stats)."""
+    prefix, unit, n_groups = plan_layers(cfg)
+    stats = _zero_stats()
+    new_caches: Dict[str, Any] = {"prefix": [], "groups": None}
+
+    for i, (kind, mlp) in enumerate(prefix):
+        c = caches["prefix"][i] if caches is not None else None
+        x, nc, st = apply_block(params["prefix"][i], x, kind, mlp, cfg,
+                                policy, ctx, cache=c, want_cache=want_caches)
+        new_caches["prefix"].append(nc)
+        stats = jax.tree.map(jnp.add, stats, st)
+
+    if n_groups:
+        remat = ctx.get("remat", False)
+
+        def one_block(j, kind, mlp, bp, x, c):
+            return apply_block(bp, x, kind, mlp, cfg, policy, ctx,
+                               cache=c, want_cache=want_caches)
+
+        def group_body(carry, xs):
+            x, stats = carry
+            gp = xs[0]
+            gcache = xs[1] if caches is not None else None
+            out_caches = {}
+            for j, (kind, mlp) in enumerate(unit):
+                c = gcache[f"b{j}"] if gcache is not None else None
+                fn = functools.partial(one_block, j, kind, mlp)
+                if remat:
+                    # per-block remat: backward replays one block at a
+                    # time, so residuals never exceed a single block's
+                    fn = jax.checkpoint(fn)
+                x, nc, st = fn(gp[f"b{j}"], x, c)
+                if nc is not None:
+                    out_caches[f"b{j}"] = nc
+                stats = jax.tree.map(jnp.add, stats, st)
+            ys = out_caches if (want_caches or caches is not None) else None
+            return (x, stats), ys
+
+        xs = (params["groups"],) if caches is None else (
+            params["groups"], caches["groups"])
+        (x, stats), group_caches = jax.lax.scan(group_body, (x, stats), xs)
+        new_caches["groups"] = group_caches
+
+    return x, new_caches, stats

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               opt_state_specs)  # noqa: F401
+from repro.optim.schedules import cosine_schedule  # noqa: F401

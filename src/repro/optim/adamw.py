@@ -1,0 +1,126 @@
+"""Mixed-precision AdamW with optional ZeRO-1 state sharding.
+
+Params live in the model dtype (bf16); the optimizer keeps an fp32 master
+copy plus fp32 moments. With ``zero1=True`` the three fp32 state copies are
+additionally sharded along a data axis when a divisible dimension exists
+(JingZhao Resource-Subsystem thinking: state is a *resource* owned by a
+subsystem; how it is laid out must not leak into the Semantics layer).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def adamw_init(params) -> dict:
+    # copy=True: an f32 param must not alias its master (donation safety)
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig,
+                 lr_fn: Optional[Callable] = None):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    if lr_fn is None:
+        from repro.optim.schedules import cosine_schedule
+        lr_fn = cosine_schedule(cfg.lr, cfg.warmup_steps, cfg.total_steps)
+    lr = lr_fn(step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, mast):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        mast = mast - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                            + cfg.weight_decay * mast)
+        return m, v, mast
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_ma = treedef.flatten_up_to(opt_state["master"])
+    new_m, new_v, new_ma = [], [], []
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+        m2, v2, ma2 = upd(g, m, v, ma)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_ma.append(ma2)
+    new_state = {
+        "master": jax.tree.unflatten(treedef, new_ma),
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "step": step,
+    }
+    dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda ma, dt: ma.astype(dt),
+                              new_state["master"], dtypes)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def _zero1_axes(axes: Tuple, shape: Tuple[int, ...], dp_size: int,
+                dp_name: str = "data"):
+    """Add a data axis to the largest free divisible dim (ZeRO-1)."""
+    best, best_dim = None, -1
+    for i, (ax, n) in enumerate(zip(axes, shape)):
+        if ax is None and n % dp_size == 0 and n > best_dim:
+            best, best_dim = i, n
+    if best is None:
+        return axes
+    out = list(axes)
+    out[best] = dp_name
+    return tuple(out)
+
+
+def opt_state_specs(pspecs, params_shape, zero1: bool = False,
+                    dp_size: int = 1):
+    """Logical-axes pytree for the optimizer state, mirroring param specs.
+
+    pspecs: pytree of logical-axes tuples (same structure as params).
+    """
+    is_axes = lambda v: isinstance(v, tuple) and all(
+        a is None or isinstance(a, str) for a in v)
+    if zero1:
+        f32_axes = jax.tree.map(
+            lambda ax, sh: _zero1_axes(ax, sh.shape, dp_size),
+            pspecs, params_shape, is_leaf=is_axes)
+    else:
+        f32_axes = pspecs
+    return {
+        "master": f32_axes,
+        "m": f32_axes,
+        "v": f32_axes,
+        "step": (),
+    }

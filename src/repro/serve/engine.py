@@ -1,0 +1,238 @@
+"""Continuous-batching serving engine — the Queue + Resource subsystems.
+
+JingZhao mapping (DESIGN.md §2):
+  Queue Subsystem    -> request queue (HostMultiQueue), slot scheduler
+                        (doorbell = request arrival; WQE = work item)
+  Resource Subsystem -> KV page accounting (PagePool = MTT), host-DRAM
+                        overflow tier with **VoQ non-blocking parking**: a
+                        sequence whose pages are off-device is parked (its
+                        slot stays frozen via the decode `active` mask)
+                        while every other sequence keeps decoding
+  Semantics          -> whichever of the 10 architectures is loaded
+  Transport          -> (serving) retry/requeue of parked work
+
+The engine is exact (not a simulation): parked slots' caches are
+bit-frozen, evicted KV really moves to host numpy arrays and back.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.multiqueue import HostMultiQueue
+from repro.core.resource import BusModel, PagePool
+from repro.models import lm
+from repro.serve.prefix_cache import PrefixCache
+from repro.sharding.policy import NULL_POLICY, Policy
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    arrived_at: float = 0.0
+    tokens_out: List[int] = field(default_factory=list)
+    finished_at: Optional[float] = None
+
+
+@dataclass
+class EngineConfig:
+    slots: int = 4
+    cache_len: int = 256
+    page_size: int = 16
+    n_pages: int = 256            # device page budget (admission control)
+    prefix_cache_entries: int = 32
+    eos_token: int = 0
+    host_offload: bool = True     # VoQ overflow tier
+    bus: BusModel = field(default_factory=BusModel)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 policy: Policy = NULL_POLICY):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.policy = policy
+        B, L = ecfg.slots, ecfg.cache_len
+        self.state = lm.init_serve_state(cfg, B, L, filled=False)
+        self.active = np.zeros(B, bool)          # slot has a sequence
+        self.running = np.zeros(B, bool)         # not parked
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.waiting = HostMultiQueue(1, capacity=1 << 12)
+        self.pool = PagePool(ecfg.n_pages, ecfg.page_size)
+        self.prefix = PrefixCache(ecfg.prefix_cache_entries)
+        self.host_tier: Dict[int, tuple] = {}    # req_id -> (caches, meta)
+        self._park_ready: Dict[int, float] = {}  # req_id -> upload done time
+        self.completed: List[Request] = []
+        self.stats = {"decode_steps": 0, "decode_tokens": 0, "prefills": 0,
+                      "prefill_tokens": 0, "parked": 0, "unparked": 0,
+                      "prefix_hits": 0}
+
+        self._decode = jax.jit(
+            lambda p, t, s, a: lm.decode_step(p, t, s, cfg, policy, active=a))
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, t, cfg, policy, cache_len=L))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.arrived_at = time.perf_counter()
+        self.waiting.push(0, req)
+
+    # -- slot management -------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        idle = np.nonzero(~self.active)[0]
+        return int(idle[0]) if len(idle) else None
+
+    def _insert_cache(self, slot: int, caches):
+        """Scatter a batch-1 prefill cache into slot `slot`."""
+        def ins(dst, src):
+            return dst.at[slot].set(src[0].astype(dst.dtype))
+        self.state["caches"] = jax.tree.map(
+            lambda d, s: _tree_insert(d, s, slot),
+            self.state["caches"], caches)
+
+    def _admit(self) -> int:
+        admitted = 0
+        while True:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            req: Optional[Request] = self.waiting.pop(0)
+            if req is None:
+                break
+            n_tok = len(req.prompt) + req.max_new_tokens
+            if not self.pool.ensure_capacity(req.req_id, n_tok):
+                # no pages: try VoQ eviction of a parked candidate first
+                if not self._evict_someone(exclude=req.req_id):
+                    self.waiting.push(0, req)     # requeue; others proceed
+                    break
+                if not self.pool.ensure_capacity(req.req_id, n_tok):
+                    self.waiting.push(0, req)
+                    break
+            self._prefill_into(slot, req)
+            admitted += 1
+        return admitted
+
+    def _prefill_into(self, slot: int, req: Request):
+        prompt = np.asarray(req.prompt, np.int32)
+        cached = self.prefix.get(prompt)
+        if cached is not None:
+            caches, length, first_tok = cached
+            self.stats["prefix_hits"] += 1
+        else:
+            logits, st = self._prefill(self.params, jnp.asarray(prompt[None]))
+            caches = st["caches"]
+            length = len(prompt)
+            first_tok = int(jnp.argmax(logits[0]))
+            self.prefix.put(prompt, (caches, length, first_tok))
+            self.stats["prefills"] += 1
+            self.stats["prefill_tokens"] += length
+        req.tokens_out.append(first_tok)
+        self.state["caches"] = jax.tree.map(
+            lambda d, s: _tree_insert(d, s, slot), self.state["caches"],
+            caches)
+        self.state["lengths"] = self.state["lengths"].at[slot].set(length)
+        self.state["positions"] = self.state["positions"].at[slot].set(length)
+        self.active[slot] = True
+        self.running[slot] = True
+        self.slot_req[slot] = req
+
+    # -- VoQ parking / eviction -------------------------------------------
+    def _evict_someone(self, exclude: int) -> bool:
+        """Move the most recently admitted *running* sequence's pages to
+        the host tier; park it (non-blocking for everyone else)."""
+        if not self.ecfg.host_offload:
+            return False
+        cands = [i for i in range(self.ecfg.slots)
+                 if self.active[i] and self.running[i]
+                 and self.slot_req[i] is not None
+                 and self.slot_req[i].req_id != exclude]
+        if not cands:
+            return False
+        slot = cands[-1]
+        req = self.slot_req[slot]
+        caches = jax.tree.map(lambda c: np.asarray(c[slot]),
+                              self.state["caches"])
+        meta = (int(self.state["lengths"][slot]),
+                int(self.state["positions"][slot]), slot)
+        self.host_tier[req.req_id] = (caches, meta)
+        nbytes = sum(c.nbytes for c in jax.tree.leaves(caches))
+        self._park_ready[req.req_id] = (
+            time.perf_counter() + self.ecfg.bus.transfer_time(nbytes))
+        self.running[slot] = False
+        self.pool.release(req.req_id)
+        self.stats["parked"] += 1
+        return True
+
+    def _try_unpark(self):
+        now = time.perf_counter()
+        for req_id in list(self._park_ready):
+            if self._park_ready[req_id] > now:
+                continue
+            caches, (length, pos, slot) = self.host_tier[req_id]
+            req = self.slot_req[slot]
+            if req is None or req.req_id != req_id or self.running[slot]:
+                continue
+            need = length + req.max_new_tokens - len(req.tokens_out)
+            if not self.pool.ensure_capacity(req_id, need):
+                continue
+            self.state["caches"] = jax.tree.map(
+                lambda d, s: _tree_insert(d, jnp.asarray(s)[None], slot),
+                self.state["caches"], caches)
+            self.running[slot] = True
+            del self._park_ready[req_id]
+            del self.host_tier[req_id]
+            self.stats["unparked"] += 1
+
+    # -- main loop ---------------------------------------------------------
+    def step(self):
+        self._admit()
+        self._try_unpark()
+        if not self.active.any():
+            return
+        tokens = np.zeros(self.ecfg.slots, np.int32)
+        for i, req in enumerate(self.slot_req):
+            if req is not None and req.tokens_out:
+                tokens[i] = req.tokens_out[-1]
+        act = jnp.asarray(self.active & self.running)
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(tokens), self.state, act)
+        self.stats["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in range(self.ecfg.slots):
+            req = self.slot_req[i]
+            if req is None or not (self.active[i] and self.running[i]):
+                continue
+            tok = int(nxt[i])
+            req.tokens_out.append(tok)
+            self.stats["decode_tokens"] += 1
+            done = (len(req.tokens_out) >= req.max_new_tokens
+                    or tok == self.ecfg.eos_token
+                    or int(self.state["positions"][i]) >= self.ecfg.cache_len)
+            if done:
+                req.finished_at = time.perf_counter()
+                self.completed.append(req)
+                self.pool.release(req.req_id)
+                self.active[i] = False
+                self.running[i] = False
+                self.slot_req[i] = None
+
+    def run_until_done(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            if (not self.active.any() and self.waiting.qlen(0) == 0
+                    and not self.host_tier):
+                break
+            self.step()
+        return self.completed
+
+
+def _tree_insert(dst, src, slot: int):
+    return dst.at[slot].set(src[0].astype(dst.dtype))

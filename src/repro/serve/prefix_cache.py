@@ -1,0 +1,53 @@
+"""Prefix cache — the in-network Key-Value cache (paper §4.5.2), reframed.
+
+The paper's KV-store NIC answers GETs from a hash pipeline; the serving
+analogue caches *prompt KV state* keyed by a content hash so repeated
+prefixes skip prefill. Hashing is the serial PPU (the paper's 64-cycle
+SHA core); `n_hash_units` models the replicated-PPU scaling of Fig 13 and
+is exercised by benchmarks/kv_scaling.py.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+
+def prompt_key(tokens: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(tokens).tobytes()).hexdigest()
+
+
+class PrefixCache:
+    """LRU prompt -> (kv_state, last_logits) cache with hit accounting."""
+
+    def __init__(self, capacity: int = 64, n_hash_units: int = 1):
+        self.capacity = capacity
+        self.n_hash_units = n_hash_units
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.hash_ops = 0
+
+    def get(self, tokens: np.ndarray) -> Optional[Any]:
+        self.hash_ops += 1
+        k = prompt_key(tokens)
+        if k in self._d:
+            self.hits += 1
+            self._d.move_to_end(k)
+            return self._d[k]
+        self.misses += 1
+        return None
+
+    def put(self, tokens: np.ndarray, value: Any):
+        k = prompt_key(tokens)
+        self._d[k] = value
+        self._d.move_to_end(k)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0

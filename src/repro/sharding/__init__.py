@@ -1,0 +1,1 @@
+from repro.sharding.policy import Policy, make_policy  # noqa: F401

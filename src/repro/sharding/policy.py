@@ -1,0 +1,135 @@
+"""Logical-axis sharding policy.
+
+Tensors in the model code are annotated with *logical* axis names; the policy
+maps those to mesh axes and applies ``with_sharding_constraint``. This is the
+JingZhao idea of keeping the Semantics Subsystem (model math) independent of
+the Transport Subsystem (how data moves): the same model code runs on a
+single-pod (data, model) mesh, the two-pod (pod, data, model) mesh, or a
+1-device CPU smoke mesh, purely by swapping the rule table.
+
+Logical axes used across the framework:
+  batch      global batch                      -> (pod,) data
+  act_seq    sequence dim of the residual stream; sharded over `model` when
+             sequence-parallelism (SP) is on (training/prefill), else unsharded
+  kv_seq     KV-cache sequence dim; sharded over data axes for long-context
+  heads      attention query heads / head groups -> model
+  kv_heads   attention kv heads (may pad-shard: kv < |model|) -> model
+  ff         MLP hidden -> model
+  vocab      embedding/logits vocab -> model
+  experts    MoE expert dim -> model
+  inner      mamba d_inner / rwkv channel blocks -> model
+  pages      KV page-pool dim -> data axes
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+def _base_rules(multi_pod: bool, sp: bool, shard_kv_seq: bool) -> Dict[str, Axes]:
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    return {
+        # long-context decode (batch < data axis) re-purposes the data axes
+        # for KV sequence sharding; batch is then replicated.
+        "batch": None if shard_kv_seq else dp,
+        "act_seq": "model" if sp else None,
+        "kv_seq": dp if shard_kv_seq else None,
+        "mla_seq": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "inner": "model",
+        "pages": dp,
+        "lora": None,
+        "state": None,
+    }
+
+
+@dataclass
+class Policy:
+    mesh: Optional[Mesh]
+    rules: Dict[str, Axes] = field(default_factory=dict)
+
+    # ---- mesh facts ---------------------------------------------------
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        r = self.rules.get("batch") or ()
+        return r if isinstance(r, tuple) else (r,)
+
+    @property
+    def tp_axis(self) -> str:
+        return "model"
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.axis_size(a)
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_size("model") if self.mesh is not None else 1
+
+    # ---- specs --------------------------------------------------------
+    def spec(self, *logical: Optional[str]) -> P:
+        parts = []
+        mesh_axes = set(self.mesh.axis_names) if self.mesh is not None else set()
+        for name in logical:
+            if name is None:
+                parts.append(None)
+            elif name in self.rules:
+                parts.append(self.rules[name])
+            elif name in mesh_axes:
+                parts.append(name)   # raw mesh axis (e.g. ZeRO-1 "data")
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def named(self, *logical: Optional[str]) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x, *logical: Optional[str]):
+        """with_sharding_constraint by logical axes (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical)))
+
+    def tree_named(self, spec_tree):
+        """Map a pytree of logical-axis tuples to NamedShardings."""
+        return jax.tree.map(
+            lambda axes: self.named(*axes),
+            spec_tree,
+            is_leaf=lambda v: isinstance(v, tuple) and all(
+                a is None or isinstance(a, str) for a in v),
+        )
+
+
+def make_policy(mesh: Optional[Mesh], *, multi_pod: bool = False,
+                sp: bool = False, shard_kv_seq: bool = False,
+                fsdp: bool = False,
+                overrides: Optional[Dict[str, Axes]] = None) -> Policy:
+    rules = _base_rules(multi_pod, sp, shard_kv_seq)
+    if overrides:
+        rules.update(overrides)
+    if mesh is None:
+        rules = {k: None for k in rules}
+    rules["fsdp_params"] = fsdp and mesh is not None
+    return Policy(mesh=mesh, rules=rules)
+
+
+NULL_POLICY = make_policy(None)

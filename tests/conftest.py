@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests see exactly 1 device (the dry-run sets its own XLA_FLAGS; never set
+# the 512-device override globally)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,178 @@
+"""Model-math unit tests: every mixer vs its sequential/dense oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (MLAConfig, MambaConfig, ModelConfig,
+                                RWKVConfig)
+from repro.models.attention import chunked_causal_attention, decode_attention
+from repro.models import mamba as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import rope_angles
+
+
+def dense_ref(q, k, v, window=0):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    k = jnp.repeat(k, H // KV, 2)
+    v = jnp.repeat(v, H // KV, 2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(hd)
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    m = pos_k <= pos_q
+    if window:
+        m &= pos_k > pos_q - window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,chunk,win", [
+    (2, 128, 4, 2, 16, 32, 0), (1, 96, 4, 4, 8, 32, 0),
+    (2, 128, 8, 2, 16, 32, 48), (1, 100, 2, 1, 16, 32, 0),
+])
+def test_chunked_attention_fwd_bwd(B, S, H, KV, hd, chunk, win):
+    ks = jax.random.split(jax.random.PRNGKey(B + S), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    out = chunked_causal_attention(q, k, v, chunk=chunk, window=win)
+    ref = dense_ref(q, k, v, win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+    gf = jax.grad(lambda q, k, v: jnp.sum(chunked_causal_attention(
+        q, k, v, chunk=chunk, window=win) ** 2), (0, 1, 2))(q, k, v)
+    gg = jax.grad(lambda q, k, v: jnp.sum(
+        dense_ref(q, k, v, win) ** 2), (0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gg):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_decode_attention_ragged_lengths():
+    B, Smax, H, KV, hd = 3, 64, 8, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, Smax, KV, hd))
+    vc = jax.random.normal(ks[2], (B, Smax, KV, hd))
+    lengths = jnp.asarray([64, 10, 33])
+    out = decode_attention(q, kc, vc, lengths)
+    for b, L in enumerate([64, 10, 33]):
+        kk = jnp.repeat(kc[b, :L], H // KV, 1)
+        vv = jnp.repeat(vc[b, :L], H // KV, 1)
+        s = jnp.einsum("hd,shd->hs", q[b], kk) / np.sqrt(hd)
+        o = jnp.einsum("hs,shd->hd", jax.nn.softmax(s, -1), vv)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(o),
+                                   atol=2e-5)
+
+
+def _mk_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=1, d_model=32, n_heads=2,
+                n_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_mla_prefill_decode_equivalence():
+    cfg = _mk_cfg(n_heads=4, d_model=64,
+                  mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=16,
+                                qk_rope_dim=8, v_head_dim=16))
+    p = mla_mod.init_mla(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 64)) * 0.5
+    ang = rope_angles(jnp.arange(S), cfg.mla.qk_rope_dim, cfg.rope_theta)
+    out_full, _ = mla_mod.mla_prefill(x, p, cfg, ang, None, want_cache=True)
+    c = jnp.zeros((B, S, 32))
+    r = jnp.zeros((B, S, 8))
+    outs = []
+    for t in range(S):
+        full = {"c_kv": c, "k_rope": r, "length": jnp.full((B,), t + 1)}
+        o, new = mla_mod.mla_decode(x[:, t], p, cfg, full,
+                                    jnp.full((B,), t, jnp.int32), None)
+        c, r = new["c_kv"], new["k_rope"]
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(out_full),
+                               np.asarray(jnp.stack(outs, 1)), atol=5e-5)
+
+
+def test_mamba_chunked_vs_sequential():
+    cfg = _mk_cfg(family="ssm", mamba=MambaConfig(d_state=8, d_conv=4,
+                                                  expand=2))
+    p = mamba_mod.init_mamba(jax.random.PRNGKey(2), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 37, 32))
+    y_chunk, st = mamba_mod.mamba_forward(x, p, cfg, None, chunk=8,
+                                          want_state=True)
+    state = {"conv": jnp.zeros((2, 3, 64)), "ssm": jnp.zeros((2, 64, 8))}
+    ys = []
+    for t in range(37):
+        yt, state = mamba_mod.mamba_decode(x[:, t], p, cfg, state, None)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.stack(ys, 1)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st["ssm"]),
+                               np.asarray(state["ssm"]), atol=1e-5)
+
+
+def test_rwkv_chunked_vs_sequential():
+    cfg = _mk_cfg(family="ssm", n_heads=4, n_kv_heads=4, attn_free=True,
+                  rwkv=RWKVConfig(head_dim=8))
+    p = rwkv_mod.init_rwkv(jax.random.PRNGKey(4), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 33, 32)) * 0.5
+    y_full, st = rwkv_mod.rwkv_time_mix(x, p, cfg, None, want_state=True)
+    state = {"wkv": jnp.zeros((2, 4, 8, 8)), "shift_tm": jnp.zeros((2, 32))}
+    ys = []
+    for t in range(33):
+        yt, state = rwkv_mod.rwkv_time_mix_decode(x[:, t], p, cfg, state)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.stack(ys, 1)), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(st["wkv"]),
+                               np.asarray(state["wkv"]), atol=5e-5)
+
+
+def test_moe_sharded_equals_local_1dev():
+    from repro.configs.registry import SMOKE_CONFIGS
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models.moe import init_moe, moe_mlp
+    from repro.sharding.policy import make_policy
+    cfg = SMOKE_CONFIGS["moonshot-v1-16b-a3b"]
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model)) * 0.5
+    out_local, st_l = moe_mlp(x, p, cfg, None)
+    mesh = make_smoke_mesh()
+    pol = make_policy(mesh)
+    with mesh:
+        out_shard, st_s = jax.jit(
+            lambda x, p: moe_mlp(x, p, cfg, pol))(x, p)
+    np.testing.assert_allclose(np.asarray(out_local), np.asarray(out_shard),
+                               atol=2e-5)
+    assert abs(float(st_l["moe_dropped"]) - float(st_s["moe_dropped"])) < 1e-6
+
+
+def test_moe_dropping_is_only_prefill_decode_gap():
+    """With capacity cranked, MoE archs' decode == prefill (bf16 tol)."""
+    import repro.models.moe as moe_mod
+    from repro.configs.registry import SMOKE_CONFIGS
+    from repro.models import lm
+    from repro.sharding.policy import NULL_POLICY
+    orig = moe_mod._capacity
+    moe_mod._capacity = lambda t, cfg, cf: max(8, t * cfg.moe.top_k)
+    try:
+        cfg = SMOKE_CONFIGS["deepseek-v2-lite-16b"]
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        B, S, K = 2, 24, 4
+        toks = jax.random.randint(jax.random.PRNGKey(7), (B, S + K), 0,
+                                  cfg.vocab_size)
+        _, state = jax.jit(lambda p, t: lm.prefill(
+            p, t, cfg, NULL_POLICY, cache_len=S + K))(params, toks[:, :S])
+        dec = jax.jit(lambda p, t, s: lm.decode_step(
+            p, t, s, cfg, NULL_POLICY))
+        for t in range(K):
+            logits_d, state = dec(params, toks[:, S + t], state)
+        logits_ref, _ = jax.jit(lambda p, t: lm.prefill(
+            p, t, cfg, NULL_POLICY))(params, toks)
+        assert np.abs(np.asarray(logits_d, np.float32)
+                      - np.asarray(logits_ref, np.float32)).max() < 0.25
+    finally:
+        moe_mod._capacity = orig

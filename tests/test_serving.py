@@ -1,0 +1,113 @@
+"""Serving engine: continuous batching, prefix cache, VoQ parking, pages."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.core.resource import PagePool
+from repro.models import lm
+from repro.serve.engine import EngineConfig, Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mk(cfg, params, **kw):
+    e = EngineConfig(slots=3, cache_len=96, n_pages=64, page_size=8,
+                     eos_token=-1, **kw)
+    return ServingEngine(cfg, params, e)
+
+
+def test_engine_completes_all(tiny):
+    cfg, params = tiny
+    eng = _mk(cfg, params)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(1, cfg.vocab_size, size=n).astype(np.int32),
+                    max_new_tokens=6)
+            for i, n in enumerate([9, 17, 25, 5, 13])]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done()
+    assert len(done) == 5
+    assert all(len(r.tokens_out) == 6 for r in done)
+    assert eng.pool.n_free == eng.pool.n_pages  # all pages released
+
+
+def test_prefix_cache_hit_is_deterministic(tiny):
+    cfg, params = tiny
+    eng = _mk(cfg, params)
+    p = np.arange(1, 20, dtype=np.int32)
+    eng.submit(Request(0, p, max_new_tokens=5))
+    eng.submit(Request(1, p.copy(), max_new_tokens=5))
+    done = eng.run_until_done()
+    a = [r for r in done if r.req_id == 0][0].tokens_out
+    b = [r for r in done if r.req_id == 1][0].tokens_out
+    assert a == b                       # greedy + shared prefix state
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefills"] == 1   # second prompt skipped prefill
+
+
+def test_decode_matches_unparked_sequence(tiny):
+    """A parked-then-resumed sequence produces the same tokens as one that
+    was never parked (the VoQ freeze is bit-exact)."""
+    cfg, params = tiny
+    prompt = np.arange(1, 12, dtype=np.int32)
+
+    ref_eng = _mk(cfg, params)
+    ref_eng.submit(Request(0, prompt, max_new_tokens=6))
+    ref = ref_eng.run_until_done()[0].tokens_out
+
+    eng = _mk(cfg, params)
+    eng.submit(Request(0, prompt, max_new_tokens=6))
+    eng.step()                # admit + 1 token
+    # park it manually (simulate page pressure), then let it resume
+    assert eng._evict_someone(exclude=-1)
+    assert eng.stats["parked"] == 1
+    for _ in range(3):
+        eng.step()            # engine runs with the slot frozen
+    import time
+    time.sleep(0.001)
+    done = eng.run_until_done()
+    assert eng.stats["unparked"] == 1
+    assert done[0].tokens_out == ref
+
+
+def test_page_pool_accounting():
+    pool = PagePool(n_pages=10, page_size=4)
+    assert pool.ensure_capacity(1, 17)          # 5 pages
+    assert pool.n_free == 5
+    assert pool.ensure_capacity(2, 20)          # 5 pages
+    assert not pool.ensure_capacity(3, 1)       # exhausted
+    pool.release(1)
+    assert pool.n_free == 5
+    t = pool.table_array(2, max_pages=8)
+    assert (t[:5] > 0).all() or 0 in pool.tables[2]
+
+
+def test_active_mask_freezes_state(tiny):
+    cfg, params = tiny
+    B = 3
+    state = lm.init_serve_state(cfg, B, 32, filled=False)
+    state["lengths"] = jnp.asarray([4, 4, 4], jnp.int32)
+    state["positions"] = jnp.asarray([4, 4, 4], jnp.int32)
+    toks = jnp.asarray([5, 6, 7], jnp.int32)
+    active = jnp.asarray([True, False, True])
+    _, new = jax.jit(lambda p, t, s, a: lm.decode_step(
+        p, t, s, cfg, __import__("repro.sharding.policy",
+                                 fromlist=["NULL_POLICY"]).NULL_POLICY,
+        active=a))(params, toks, state, active)
+    assert new["positions"].tolist() == [5, 4, 5]
+    # frozen slot's caches unchanged; group-scanned leaves are
+    # [n_groups, B, ...] so the batch axis is axis 1
+    def leafcmp(n, o):
+        return np.array_equal(np.asarray(n)[:, 1], np.asarray(o)[:, 1])
+    same = jax.tree.map(leafcmp, new["caches"]["groups"],
+                        state["caches"]["groups"])
+    assert all(jax.tree.leaves(same))
