@@ -1,0 +1,18 @@
+# Tier-1 verification and smoke benchmarks (see ROADMAP.md / README.md).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench quickstart
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) benchmarks/kv_scaling.py --mode paged
+	$(PY) benchmarks/kv_scaling.py --mode hash
+
+bench:
+	$(PY) benchmarks/run.py
+
+quickstart:
+	$(PY) examples/quickstart.py --arch qwen3-8b

@@ -1,27 +1,40 @@
-"""Fig-13 analogue: throughput vs number of parallel hash units.
+"""KV scaling: dense-vs-paged capacity + decode timing, and the Fig-13
+hash-unit saturation law.
 
-The paper's KV-store pipeline is bound by min(n_hash x hash_rate,
-slowest_other_block). We reproduce the same saturation law with the prefix
--cache hash stage: hash units scale linearly until the resource-management
-bound (~39 Mops in the paper) caps the pipeline.
+Modes (``--mode``):
+
+- ``paged`` (default) — sequences-per-device at a fixed page budget for
+  the dense per-slot layout vs the paged pool (DESIGN.md §3): dense must
+  reserve ``cache_len`` tokens per slot, paged holds exactly
+  ``ceil(len/page_size)`` pages per sequence, so variable-length traffic
+  fits ~E[cache_len/len] times more resident sequences. Prints a CSV over
+  context lengths plus the aggregate ratio.
+- ``timing`` — measured decode-step wall time vs context length for the
+  dense and paged engines on the CPU smoke model (exact same tokens).
+- ``hash`` — the paper's Fig-13 analogue: prefix-cache hash-unit scaling
+  until the resource-management bound caps the pipeline.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
-from repro.serve.prefix_cache import prompt_key
-
 HASH_RATE_OPS = 3.13e6     # one 64-cycle SHA core @200MHz (paper §6.2.2)
 OTHER_BLOCK_BOUND = 39.28e6
 
+
+# --------------------------------------------------------------------------
+# mode: hash (Fig 13)
+# --------------------------------------------------------------------------
 
 def analytic_throughput(n_hash: int) -> float:
     return min(n_hash * HASH_RATE_OPS, OTHER_BLOCK_BOUND)
 
 
 def measured_hash_rate(n: int = 2000) -> float:
+    from repro.serve.prefix_cache import prompt_key
     rng = np.random.default_rng(0)
     keys = [rng.integers(0, 1000, size=32).astype(np.int32)
             for _ in range(n)]
@@ -32,7 +45,7 @@ def measured_hash_rate(n: int = 2000) -> float:
     return n / dt
 
 
-def run():
+def run_hash() -> str:
     rows = ["n_hash_units,analytic_Mops,bound"]
     for n in (1, 2, 4, 8, 16, 32):
         t = analytic_throughput(n)
@@ -43,8 +56,109 @@ def run():
     return "\n".join(rows)
 
 
+# --------------------------------------------------------------------------
+# mode: paged (sequences-per-device at a fixed page budget)
+# --------------------------------------------------------------------------
+
+def capacity_at_budget(seq_lens: np.ndarray, budget_tokens: int,
+                       cache_len: int, page_size: int) -> dict:
+    """Resident sequences a fixed token budget holds, dense vs paged.
+
+    Dense: every slot is a [cache_len] slab regardless of actual length.
+    Paged: each sequence pins ceil(len/page_size) pages; admit greedily
+    from the same arrival stream until the pool is full.
+    """
+    dense = min(budget_tokens // cache_len, len(seq_lens))
+    n_pages = budget_tokens // page_size
+    used = 0
+    paged = 0
+    for L in seq_lens:
+        need = -(-int(L) // page_size)
+        if used + need > n_pages:
+            break
+        used += need
+        paged += 1
+    return {"dense": int(dense), "paged": int(paged),
+            "ratio": paged / max(dense, 1)}
+
+
+def run_paged(budget_tokens: int = 65536, page_size: int = 16,
+              n_seqs: int = 4096, seed: int = 0) -> str:
+    rng = np.random.default_rng(seed)
+    rows = ["cache_len,mean_seq_len,dense_seqs,paged_seqs,ratio"]
+    ratios = []
+    for cache_len in (256, 512, 1024, 2048, 4096):
+        # variable-length traffic: right-skewed (lognormal, clipped to
+        # [16, cache_len]) — most sequences are far below the max they
+        # *could* grow to, which dense must reserve for anyway
+        lens = np.clip(rng.lognormal(np.log(cache_len / 6), 0.8,
+                                     size=n_seqs).astype(int),
+                       16, cache_len)
+        r = capacity_at_budget(lens, budget_tokens, cache_len, page_size)
+        ratios.append(r["ratio"])
+        rows.append(f"{cache_len},{lens.mean():.0f},{r['dense']},"
+                    f"{r['paged']},{r['ratio']:.2f}")
+    rows.append(f"# budget {budget_tokens} tokens, page {page_size}; "
+                f"min ratio {min(ratios):.2f}x, mean {np.mean(ratios):.2f}x")
+    return "\n".join(rows)
+
+
+# --------------------------------------------------------------------------
+# mode: timing (measured decode step time vs context length)
+# --------------------------------------------------------------------------
+
+def run_timing(steps: int = 8) -> str:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import SMOKE_CONFIGS
+    from repro.models import lm
+    from repro.serve.engine import EngineConfig, Request, ServingEngine
+
+    cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rows = ["cache_len,layout,us_per_decode_step"]
+    for cache_len in (128, 256, 512):
+        prompt = np.arange(1, cache_len // 4, dtype=np.int32)
+        for layout in ("dense", "paged"):
+            eng = ServingEngine(cfg, params, EngineConfig(
+                slots=4, cache_len=cache_len, page_size=16,
+                n_pages=4 * cache_len // 16, eos_token=-1,
+                kv_layout=layout))
+            # prefill emits 1 token, 2 warm-up steps + `steps` timed steps
+            # emit one each: the request must outlive the timed loop
+            eng.submit(Request(0, prompt, max_new_tokens=steps + 4))
+            eng.step()                       # prefill + compile decode
+            eng.step()
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                assert eng.active.any()      # still decoding (no idle steps)
+                eng.step()
+            dt = (time.perf_counter() - t0) / steps
+            rows.append(f"{cache_len},{layout},{dt * 1e6:.0f}")
+    return "\n".join(rows)
+
+
 def main():
-    print(run())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("paged", "timing", "hash"),
+                    default="paged")
+    ap.add_argument("--budget-tokens", type=int, default=65536)
+    ap.add_argument("--page-size", type=int, default=16)
+    args = ap.parse_args()
+    if args.mode == "hash":
+        print(run_hash())
+    elif args.mode == "timing":
+        print(run_timing())
+    else:
+        print(run_paged(budget_tokens=args.budget_tokens,
+                        page_size=args.page_size))
+
+
+def run():
+    """Back-compat entry used by benchmarks/run.py (hash mode)."""
+    return run_hash()
 
 
 if __name__ == "__main__":

@@ -17,9 +17,12 @@ from repro.serve.engine import EngineConfig, Request, ServingEngine
 def main():
     cfg = SMOKE_CONFIGS["qwen3-8b"]
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    # deliberately tight page budget to exercise VoQ parking/eviction
+    # paged layout: KV lives in a shared page pool behind per-slot page
+    # tables (DESIGN.md §3); the deliberately tight page budget exercises
+    # alloc-on-append growth and VoQ parking/eviction
     eng = ServingEngine(cfg, params, EngineConfig(
-        slots=4, cache_len=128, n_pages=28, page_size=8, eos_token=-1))
+        slots=4, cache_len=128, n_pages=28, page_size=8, eos_token=-1,
+        kv_layout="paged"))
 
     rng = np.random.default_rng(0)
     base_prompt = rng.integers(1, cfg.vocab_size, size=24).astype(np.int32)

@@ -1,4 +1,5 @@
-"""JingZhao core: the paper's contribution as composable JAX modules.
+"""JingZhao core: the paper's contribution as composable JAX modules
+(subsystem -> module map: DESIGN.md §2).
 
 - pipeline:    PPU/Stage/Pipeline dataflow model (Fig. 4)
 - multiqueue:  Dynamic MultiQueue building block (Table 1, Fig. 9)

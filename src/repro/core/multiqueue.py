@@ -1,11 +1,14 @@
-"""Dynamic MultiQueue — JingZhao's core building block (Table 1, Fig. 9).
+"""Dynamic MultiQueue — JingZhao's core building block (Table 1, Fig. 9;
+DESIGN.md §2 Queue Subsystem row).
 
 Thousands of logical FIFOs share one fixed block of memory, with dynamic
 enqueue/dequeue and malloc/free-style insert/delete. The paper motivates it
 for per-connection NIC state; here it backs (a) the serving engine's
 request/slot management, (b) MoE per-expert token queues, (c) the KV page
 free-list. Implemented both as a host-side object (engine bookkeeping) and
-as pure-JAX functions over static-shape arrays (in-graph use).
+as pure-JAX functions over static-shape arrays (in-graph use). The MQState
+ring uses absolute head/tail counters (slot = counter % capacity);
+tests/test_paged_kv.py pins the wraparound behavior.
 """
 from __future__ import annotations
 

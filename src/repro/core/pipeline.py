@@ -1,4 +1,5 @@
-"""PPU / Stage / Pipeline — the paper's dataflow model (Fig. 4) in JAX.
+"""PPU / Stage / Pipeline — the paper's dataflow model (Fig. 4) in JAX
+(DESIGN.md §2).
 
 A PPU (Protocol Processing Unit) is a named pure function over a payload
 pytree. PPUs chain into a Stage; heterogeneous Stages form a Pipeline. The

@@ -1,9 +1,10 @@
-"""JingZhao Table-1 primitives, tensorized.
+"""JingZhao Table-1 primitives, tensorized (DESIGN.md §2).
 
 Append/Remove Header -> sequence packing with document-boundary metadata
 (the data pipeline's framing format); Scatter/Gather Data -> page-pool
-scatter/gather used by the paged KV cache. These are the pure-jnp forms;
-the hot variants live in kernels/ (moe_dispatch, decode_attention).
+scatter/gather used by the paged KV cache (DESIGN.md §3). These are the
+pure-jnp forms; the hot variants live in kernels/ (moe_dispatch,
+paged_attention).
 """
 from __future__ import annotations
 

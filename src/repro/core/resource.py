@@ -2,12 +2,14 @@
 
 Paper §4.1: connection state (QPC/MPT/MTT) lives in host memory (ICM) with
 an on-chip cache; §4.1.1's VoQ design makes a miss block only its own
-connection. TPU serving analogue: KV pages live in an HBM pool with a
-host-DRAM overflow tier across PCIe; a sequence whose page is being
-fetched is *parked* (skipped in batch assembly) while every other sequence
-keeps decoding; a background prefetcher fills pages in double-buffered
-fashion. `benchmarks/resource_miss.py` reproduces the paper's Fig 12 with
-this machinery + the event-level bus model in core/simulation.py.
+connection. TPU serving analogue (DESIGN.md §3): KV pages live in an HBM
+pool with a host-DRAM overflow tier across PCIe; a sequence whose page is
+being fetched is *parked* (skipped in batch assembly) while every other
+sequence keeps decoding. `PagePool` is the MTT — with
+``kv_layout="paged"`` its tables are the *actual* memory layout the
+decode kernel chases, not just accounting (DESIGN.md §3.1).
+`benchmarks/resource_miss.py` reproduces the paper's Fig 12 with this
+machinery + the event-level bus model in core/simulation.py.
 """
 from __future__ import annotations
 
@@ -126,9 +128,14 @@ class VoQResourceStore:
 class PagePool:
     """Shared KV page pool + free-list (Dynamic Insert/Delete).
 
-    The HBM tensor itself lives in the serving state; this object owns the
-    *allocation* metadata: which pages are free, which sequence maps to
-    which pages (the MTT analogue).
+    This is the MTT analogue (DESIGN.md §3): the pool owns *allocation*
+    metadata — which pages are free, which sequence maps to which pages —
+    while the page tensors themselves (``[n_pages, page_size, KV, hd]``
+    per layer) live in the serving state. ``ensure_capacity`` implements
+    alloc-on-append: the engine calls it with the token count *about to be
+    written* and pages are claimed exactly at page-boundary crossings, so
+    a sequence only ever holds ``ceil(len/page_size)`` pages instead of a
+    worst-case dense reservation.
     """
     n_pages: int
     page_size: int
@@ -143,6 +150,13 @@ class PagePool:
     def n_free(self) -> int:
         return len(self.free)
 
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def pages_of(self, seq_id: int) -> List[int]:
+        return list(self.tables.get(seq_id, []))
+
     def alloc(self, seq_id: int, n: int = 1) -> Optional[List[int]]:
         if len(self.free) < n:
             return None
@@ -151,6 +165,7 @@ class PagePool:
         return pages
 
     def ensure_capacity(self, seq_id: int, n_tokens: int) -> bool:
+        """Alloc-on-append: grow seq's table to cover n_tokens slots."""
         need = -(-n_tokens // self.page_size)
         have = len(self.tables.get(seq_id, []))
         if need > have:
@@ -165,4 +180,17 @@ class PagePool:
         t = self.tables.get(seq_id, [])
         out = np.zeros(max_pages, np.int32)
         out[:len(t)] = t[:max_pages]
+        return out
+
+    def table_matrix(self, seq_ids: List[Optional[int]],
+                     max_pages: int) -> np.ndarray:
+        """[B, max_pages] MTT export for a batch of slots (None -> zeros).
+
+        This array is what the decode step consumes: row b names the pool
+        pages holding slot b's KV, in token order.
+        """
+        out = np.zeros((len(seq_ids), max_pages), np.int32)
+        for b, sid in enumerate(seq_ids):
+            if sid is not None:
+                out[b] = self.table_array(sid, max_pages)
         return out

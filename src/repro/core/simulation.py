@@ -1,4 +1,5 @@
-"""System-level event simulation (paper C4): host/bus/cache interaction.
+"""System-level event simulation (paper C4): host/bus/cache interaction
+(drives the Fig-12 analogue, DESIGN.md §5).
 
 A discrete-event simulator for the Resource Subsystem's behavior under
 cache misses — the piece the paper argues network simulators can't give

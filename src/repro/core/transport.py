@@ -1,4 +1,5 @@
-"""Transport Subsystem — reliability policies (paper §4.4, GBN vs SR).
+"""Transport Subsystem — reliability policies (paper §4.4, GBN vs SR;
+DESIGN.md §2 Transport row).
 
 Two layers:
 

@@ -1,110 +1,8 @@
-"""Pallas TPU paged decode attention (vLLM-style block tables).
-
-JingZhao mapping: this is the Resource Subsystem's *Gather Data* primitive
-in kernel form — a sequence's KV lives scattered across a shared page pool
-(the paper's ICM); the page table (MTT analogue) is scalar-prefetched into
-SMEM so BlockSpec index maps can chase it, and pages stream through VMEM
-one block per grid step with online-softmax accumulation in scratch.
-
-q: [B, H, hd]; k_pages/v_pages: [NP, page, KV, hd]; page_table: [B, MP]
-int32; lengths: [B] int32. Grid: (B, KV, MP) — last dim sequential.
+"""Back-compat shim — the paged decode kernel moved to
+kernels/paged_attention.py (which also owns the jnp backend and the
+``paged_append`` scatter half). Import from there in new code.
 """
 from __future__ import annotations
 
-import functools
-import math
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-try:
-    from jax.experimental.pallas import tpu as pltpu
-    _SCRATCH = lambda shape: pltpu.VMEM(shape, jnp.float32)
-    _GridSpec = pltpu.PrefetchScalarGridSpec
-except Exception:  # pragma: no cover
-    _SCRATCH = None
-    _GridSpec = None
-
-NEG_INF = -1e30
-
-
-def _pd_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
-               m_scr, l_scr, acc_scr, *, scale, page, n_pages):
-    b = pl.program_id(0)
-    p = pl.program_id(2)
-
-    @pl.when(p == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    length = lengths_ref[b]
-    base = p * page
-    in_range = base < length
-
-    @pl.when(in_range)
-    def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)         # [G, hd]
-        k = k_ref[0, :, 0, :].astype(jnp.float32)   # [page, hd]
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale  # [G, page]
-        pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos < length, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1))
-        pr = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * corr + pr.sum(axis=1)
-        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
-            pr, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
-
-    @pl.when(p == n_pages - 1)
-    def _finalize():
-        l = l_scr[...]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
-
-
-def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
-                           scale=None, interpret: bool = False):
-    """Single-token attention through a page table. Returns [B, H, hd]."""
-    B, H, hd = q.shape
-    NP, page, KV, _ = k_pages.shape
-    MP = page_table.shape[1]
-    G = H // KV
-    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
-    qg = q.reshape(B, KV, G, hd)
-
-    def q_map(b, kv, p, tbl, lens):
-        return (b, kv, 0, 0)
-
-    def kv_map(b, kv, p, tbl, lens):
-        return (tbl[b, p], 0, kv, 0)
-
-    def o_map(b, kv, p, tbl, lens):
-        return (b, kv, 0, 0)
-
-    grid_spec = _GridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, KV, MP),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), q_map),
-            pl.BlockSpec((1, page, 1, hd), kv_map),
-            pl.BlockSpec((1, page, 1, hd), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, hd), o_map),
-        scratch_shapes=[_SCRATCH((G,)), _SCRATCH((G,)), _SCRATCH((G, hd))],
-    )
-    out = pl.pallas_call(
-        functools.partial(_pd_kernel, scale=scale, page=page, n_pages=MP),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
-        interpret=interpret,
-    )(page_table, lengths, qg, k_pages, v_pages)
-    return out.reshape(B, H, hd)
+from repro.kernels.paged_attention import (  # noqa: F401
+    NEG_INF, paged_append, paged_decode_attention)

@@ -12,8 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import (decode_attention as _pd, flash_attention as _fa,
-                           linear_scan as _ls, moe_dispatch as _md,
+from repro.kernels import (flash_attention as _fa, linear_scan as _ls,
+                           moe_dispatch as _md, paged_attention as _pd,
                            wkv6 as _wkv)
 
 
@@ -36,7 +36,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
                            interpret: Optional[bool] = None):
     return _pd.paged_decode_attention(q, k_pages, v_pages, page_table,
-                                      lengths,
+                                      lengths, backend="pallas",
                                       interpret=_auto_interpret(interpret))
 
 

@@ -235,13 +235,13 @@ def paged_decode_attention(q, page_table, k_pages, v_pages, lengths, *,
     [NP,page,KV,hd] shared page pools; lengths: [B].
     The gather of pages is the paper's Gather-Data primitive: KV for one
     sequence is scattered across the shared pool exactly as a NIC gathers a
-    message from non-contiguous host buffers.
+    message from non-contiguous host buffers. Dispatches to the Pallas
+    kernel on TPU and the jnp gather elsewhere (kernels/paged_attention).
     """
-    B = q.shape[0]
-    NP, page, KV, hd = k_pages.shape
-    MP = page_table.shape[1]
-    k = k_pages[page_table]                    # [B,MP,page,KV,hd]
-    v = v_pages[page_table]
-    k = k.reshape(B, MP * page, KV, hd)
-    v = v.reshape(B, MP * page, KV, hd)
-    return decode_attention(q, k, v, lengths, policy=policy, scale=scale)
+    from repro.kernels import paged_attention as pk
+    if policy is not None:
+        q = policy.constrain(q, "batch", "heads", None)
+        k_pages = policy.constrain(k_pages, "pages", None, "kv_heads", None)
+        v_pages = policy.constrain(v_pages, "pages", None, "kv_heads", None)
+    return pk.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                     lengths, scale=scale, backend="auto")

@@ -17,12 +17,18 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map as _shard_map
+
+try:                                    # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+    _SM_REP_KWARG = "check_vma"
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_REP_KWARG = "check_rep"
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_rep=False):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      check_vma=check_rep)
+                      **{_SM_REP_KWARG: check_rep})
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
@@ -255,7 +261,8 @@ def decode_step(params, tokens, state, cfg: ModelConfig, policy: Policy,
     ctx = {"mode": "decode",
            "positions": state["positions"],
            "lengths": state["lengths"],
-           "active": active}
+           "active": active,
+           "page_table": state.get("page_table")}
     x, caches, _ = tf.apply_stack(params["stack"], x, cfg, policy, ctx,
                                   caches=state["caches"])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -269,6 +276,8 @@ def decode_step(params, tokens, state, cfg: ModelConfig, policy: Policy,
         "lengths": state["lengths"] + adv,
         "positions": state["positions"] + adv,
     }
+    if state.get("page_table") is not None:
+        new_state["page_table"] = state["page_table"]
     return logits, new_state
 
 
@@ -282,6 +291,31 @@ def init_serve_state(cfg: ModelConfig, batch: int, cache_len: int,
         "caches": caches,
         "lengths": jnp.full((batch,), fill, jnp.int32),
         "positions": jnp.full((batch,), fill, jnp.int32),
+    }
+
+
+def init_paged_serve_state(cfg: ModelConfig, batch: int, n_pages: int,
+                           page_size: int, max_pages: int, dtype=None,
+                           tp: int = 1) -> dict:
+    """Paged decoding state: shared per-layer page pools + per-slot MTT.
+
+    ``caches`` leaves are [n_pages, page_size, KV, hd] pools shared by all
+    `batch` slots; ``page_table`` [batch, max_pages] names each slot's
+    pages in token order (rows are rewritten by the engine as the PagePool
+    allocates on append). Total pool memory is n_pages*page_size tokens —
+    the budget the engine admits against — independent of `batch`.
+    """
+    if not tf.paged_stack_supported(cfg):
+        raise ValueError(
+            f"paged KV serving requires a pure-attention config "
+            f"(no MLA/SWA/mamba/rwkv); got {cfg.name}")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "caches": tf.init_paged_stack_caches(cfg, n_pages, page_size,
+                                             dtype, tp=tp),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "positions": jnp.zeros((batch,), jnp.int32),
+        "page_table": jnp.zeros((batch, max_pages), jnp.int32),
     }
 
 

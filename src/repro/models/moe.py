@@ -74,7 +74,7 @@ def moe_mlp(x: jnp.ndarray, p: dict, cfg: ModelConfig, policy,
 
 
 def _moe_mlp_sharded(x, p, cfg, policy, capacity_factor):
-    from jax import shard_map
+    from repro.models.lm import shard_map   # version-compat shim
     from jax.sharding import PartitionSpec as P
     moe = cfg.moe
     dp, tp = policy.dp_axes, policy.tp_axis
@@ -126,7 +126,6 @@ def _moe_mlp_sharded(x, p, cfg, policy, capacity_factor):
         in_specs=(g_spec, P(None, None),
                   w_spec("w_gate"), w_spec("w_up"), w_spec("w_down")),
         out_specs=(g_spec, P()),
-        check_vma=False,
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     if moe.n_shared:
         out = out + dense_mlp(x, p["shared"], cfg, policy)

@@ -21,7 +21,8 @@ from repro.models import mla as mla_mod
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
-from repro.models.attention import (chunked_causal_attention, decode_attention)
+from repro.models.attention import (chunked_causal_attention, decode_attention,
+                                    paged_decode_attention)
 from repro.models.layers import (apply_rope, dense_mlp, init_dense_mlp,
                                  mlp_specs, rms_norm, rope_angles)
 
@@ -155,6 +156,31 @@ def attn_forward(x, p, cfg: ModelConfig, policy, ctx,
     return out, cache
 
 
+def attn_decode_paged(x, p, cfg: ModelConfig, policy, ctx, cache):
+    """Paged decode: KV lives in a shared page pool, not a per-slot slab.
+
+    x: [B,D]; cache {k,v: [NP,page,KV,hd]} — the *pool*, shared by every
+    slot; ctx carries positions/lengths [B] and page_table [B,MP] (the MTT
+    row per slot, exported by core.resource.PagePool). The new token's K/V
+    is scattered into its owning page (parked slots' writes are dropped —
+    see kernels.paged_attention.paged_append), then attention gathers
+    through the table (DESIGN.md §3).
+    """
+    from repro.kernels.paged_attention import paged_append
+    positions, lengths = ctx["positions"], ctx["lengths"]
+    table = ctx["page_table"]
+    q, k_new, v_new = _qkv(x, p, cfg)                  # [B,H,hd],[B,KV,hd]
+    ang = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q[:, None], ang[:, None])[:, 0]
+    k_new = apply_rope(k_new[:, None], ang[:, None])[:, 0]
+    k_p, v_p = paged_append(cache["k"], cache["v"], k_new, v_new, table,
+                            positions, active=ctx.get("active"))
+    out = paged_decode_attention(q, table, k_p, v_p, lengths + 1,
+                                 policy=policy)
+    out = out.reshape(x.shape[0], -1) @ p["wo"]
+    return out, {"k": k_p, "v": v_p}
+
+
 def attn_decode(x, p, cfg: ModelConfig, policy, ctx, cache):
     """x: [B,D]; cache {k,v: [B,Smax,KV,hd]}; ctx has positions/lengths [B]."""
     B, _ = x.shape
@@ -230,6 +256,7 @@ def apply_block(p, x, kind: str, mlp_kind: str, cfg: ModelConfig, policy,
     """Returns (x, new_cache, stats). Train mode: cache=None, want_cache=False."""
     mode = ctx["mode"]
     stats = _zero_stats()
+    pool_cache = False       # cache is a shared page pool, not per-slot
     if policy is not None and mode != "decode":
         x = policy.constrain(x, "batch", "act_seq", None)
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
@@ -251,7 +278,15 @@ def apply_block(p, x, kind: str, mlp_kind: str, cfg: ModelConfig, policy,
                             for k2, v2 in new_cache.items()}
         else:
             if mode == "decode":
-                a, new_cache = attn_decode(h, p["attn"], cfg, policy, ctx, cache)
+                if ctx.get("page_table") is not None:
+                    # shared-pool path: parking handled inside (dropped
+                    # writes), so the per-slot freeze below must not run
+                    a, new_cache = attn_decode_paged(h, p["attn"], cfg,
+                                                     policy, ctx, cache)
+                    pool_cache = True
+                else:
+                    a, new_cache = attn_decode(h, p["attn"], cfg, policy,
+                                               ctx, cache)
             else:
                 a, new_cache = attn_forward(h, p["attn"], cfg, policy, ctx,
                                             want_cache=want_cache)
@@ -304,9 +339,11 @@ def apply_block(p, x, kind: str, mlp_kind: str, cfg: ModelConfig, policy,
     if policy is not None and mode != "decode":
         x = policy.constrain(x, "batch", "act_seq", None)
     if mode == "decode" and ctx.get("active") is not None and cache is not None \
-            and new_cache is not None:
+            and new_cache is not None and not pool_cache:
         # VoQ parking: frozen (parked) sequences keep their old state; only
-        # active connections advance (paper §4.1.1 per-connection blocking)
+        # active connections advance (paper §4.1.1 per-connection blocking).
+        # Shared page pools skip this: their leading dim is n_pages, not
+        # batch, and parked writes were already dropped at the scatter.
         act = ctx["active"]
 
         def sel(n, o):
@@ -429,6 +466,88 @@ def init_stack_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype,
         caches["groups"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
     return caches
+
+
+def init_paged_stack_caches(cfg: ModelConfig, n_pages: int, page_size: int,
+                            dtype, tp: int = 1) -> dict:
+    """Shared-pool caches: every attn layer holds [NP, page, KV, hd] pools.
+
+    Unlike init_stack_caches there is no per-slot batch dim — all serving
+    slots share one fixed block of page memory per layer and are separated
+    only by the page table (the paper's MTT indirection). Paged serving is
+    gated to pure-attention configs (no MLA/SWA/mamba/rwkv caches), which
+    the caller (models.lm.init_paged_serve_state) enforces.
+    """
+    _, KV = eff_heads(cfg, tp)
+    hd = cfg.head_dim
+
+    def one_pool():
+        return {"k": jnp.zeros((n_pages, page_size, KV, hd), dtype),
+                "v": jnp.zeros((n_pages, page_size, KV, hd), dtype)}
+
+    prefix, unit, n_groups = plan_layers(cfg)
+    caches: Dict[str, Any] = {"prefix": [], "groups": None}
+    for kind, _ in prefix:
+        caches["prefix"].append(one_pool())
+    if n_groups:
+        one = {f"b{j}": one_pool() for j, _ in enumerate(unit)}
+        caches["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
+    return caches
+
+
+def paged_stack_supported(cfg: ModelConfig) -> bool:
+    """Paged KV needs every layer to be plain (non-MLA, non-SWA) attention."""
+    return (all(k == "attn" for k in cfg.layer_kinds())
+            and cfg.mla is None and cfg.swa_window == 0)
+
+
+# -- page-granular cache movement (engine: prefill insert, park/unpark) -----
+#
+# Pool leaves are [NP, page, KV, hd] (prefix blocks) or [G, NP, page, KV,
+# hd] (group-scanned blocks); the leading-axis difference is disambiguated
+# by ndim. These tree maps are the engine's only way to touch pool memory:
+# everything moves page-by-page, never as per-slot dense slabs.
+
+def dense_to_pages(dense_caches, n_pages: int, page_size: int):
+    """Chunk a batch-1 dense cache tree into page-granular data.
+
+    dense leaves [1, L, KV, hd] -> [n_pages, page, KV, hd] (grouped leaves
+    keep their leading G). Requires L >= n_pages*page_size (prefill pads
+    to cache_len, so the tail pages beyond `length` are zeros — masked out
+    by `lengths` at attention time).
+    """
+    def one(dense):
+        if dense.ndim == 5:                       # [G, 1, L, KV, hd]
+            G, _, L = dense.shape[:3]
+            tail = dense.shape[3:]
+            return dense[:, 0].reshape(
+                (G, L // page_size, page_size) + tail)[:, :n_pages]
+        _, L = dense.shape[:2]                    # [1, L, KV, hd]
+        tail = dense.shape[2:]
+        return dense[0].reshape(
+            (L // page_size, page_size) + tail)[:n_pages]
+    return jax.tree.map(one, dense_caches)
+
+
+def gather_pages(pool_caches, page_ids):
+    """Pull the listed pages out of every pool leaf (device -> host tier)."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(
+        lambda pool: pool[:, ids] if pool.ndim == 5 else pool[ids],
+        pool_caches)
+
+
+def scatter_pages(pool_caches, page_data, page_ids):
+    """Write page-granular data back into the listed pool pages."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def one(pool, data):
+        data = jnp.asarray(data).astype(pool.dtype)
+        if pool.ndim == 5:
+            return pool.at[:, ids].set(data)
+        return pool.at[ids].set(data)
+    return jax.tree.map(one, pool_caches, page_data)
 
 
 def stack_cache_specs(cfg: ModelConfig) -> dict:

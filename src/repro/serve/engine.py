@@ -1,18 +1,27 @@
 """Continuous-batching serving engine — the Queue + Resource subsystems.
 
-JingZhao mapping (DESIGN.md §2):
+JingZhao mapping (DESIGN.md §2, §3):
   Queue Subsystem    -> request queue (HostMultiQueue), slot scheduler
                         (doorbell = request arrival; WQE = work item)
-  Resource Subsystem -> KV page accounting (PagePool = MTT), host-DRAM
-                        overflow tier with **VoQ non-blocking parking**: a
-                        sequence whose pages are off-device is parked (its
-                        slot stays frozen via the decode `active` mask)
-                        while every other sequence keeps decoding
+  Resource Subsystem -> KV page accounting (PagePool = MTT) and, with
+                        ``kv_layout="paged"``, the *actual* memory layout:
+                        every layer's KV lives in one shared
+                        [n_pages, page_size, KV, hd] pool and sequences
+                        reach their tokens only through per-slot page
+                        tables, so admission is by real free pages and
+                        growth is alloc-on-append at page-boundary
+                        crossings. Host-DRAM overflow with **VoQ
+                        non-blocking parking**: a sequence whose pages are
+                        off-device is parked (its slot stays frozen via
+                        the decode `active` mask) while every other
+                        sequence keeps decoding.
   Semantics          -> whichever of the 10 architectures is loaded
   Transport          -> (serving) retry/requeue of parked work
 
 The engine is exact (not a simulation): parked slots' caches are
-bit-frozen, evicted KV really moves to host numpy arrays and back.
+bit-frozen, evicted KV really moves to host numpy arrays and back — in
+dense mode as whole per-slot slabs, in paged mode page-by-page
+(DESIGN.md §3.3 state machine).
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ from repro.configs.base import ModelConfig
 from repro.core.multiqueue import HostMultiQueue
 from repro.core.resource import BusModel, PagePool
 from repro.models import lm
+from repro.models import transformer as tf
 from repro.serve.prefix_cache import PrefixCache
 from repro.sharding.policy import NULL_POLICY, Policy
 
@@ -51,6 +61,7 @@ class EngineConfig:
     prefix_cache_entries: int = 32
     eos_token: int = 0
     host_offload: bool = True     # VoQ overflow tier
+    kv_layout: str = "dense"      # "dense" per-slot slabs | "paged" pool
     bus: BusModel = field(default_factory=BusModel)
 
 
@@ -62,7 +73,17 @@ class ServingEngine:
         self.ecfg = ecfg
         self.policy = policy
         B, L = ecfg.slots, ecfg.cache_len
-        self.state = lm.init_serve_state(cfg, B, L, filled=False)
+        self.paged = ecfg.kv_layout == "paged"
+        if self.paged:
+            if L % ecfg.page_size:
+                raise ValueError("cache_len must be a page_size multiple")
+            self.max_pages = L // ecfg.page_size
+            self.state = lm.init_paged_serve_state(
+                cfg, B, ecfg.n_pages, ecfg.page_size, self.max_pages)
+        elif ecfg.kv_layout != "dense":
+            raise ValueError(ecfg.kv_layout)
+        else:
+            self.state = lm.init_serve_state(cfg, B, L, filled=False)
         self.active = np.zeros(B, bool)          # slot has a sequence
         self.running = np.zeros(B, bool)         # not parked
         self.slot_req: List[Optional[Request]] = [None] * B
@@ -71,10 +92,13 @@ class ServingEngine:
         self.prefix = PrefixCache(ecfg.prefix_cache_entries)
         self.host_tier: Dict[int, tuple] = {}    # req_id -> (caches, meta)
         self._park_ready: Dict[int, float] = {}  # req_id -> upload done time
+        self._stalled: set = set()               # req_ids frozen in place
+        self._table_dirty = False                # MTT rows need re-export
         self.completed: List[Request] = []
         self.stats = {"decode_steps": 0, "decode_tokens": 0, "prefills": 0,
                       "prefill_tokens": 0, "parked": 0, "unparked": 0,
-                      "prefix_hits": 0}
+                      "prefix_hits": 0, "page_allocs": 0, "pages_peak": 0,
+                      "preempt_restarts": 0}
 
         self._decode = jax.jit(
             lambda p, t, s, a: lm.decode_step(p, t, s, cfg, policy, active=a))
@@ -83,6 +107,20 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        if len(req.prompt) + 1 > self.ecfg.cache_len:
+            # the prompt plus one generated token must fit the per-slot
+            # table/slab; longer prompts would scatter past max_pages
+            raise ValueError(
+                f"prompt length {len(req.prompt)} does not fit "
+                f"cache_len {self.ecfg.cache_len} (need len+1 <= cache_len)")
+        worst = min(len(req.prompt) + req.max_new_tokens,
+                    self.ecfg.cache_len)
+        if -(-worst // self.ecfg.page_size) > self.ecfg.n_pages:
+            # a single request needing more pages than the whole pool can
+            # never complete — it would park/preempt-cycle forever
+            raise ValueError(
+                f"request needs {worst} KV tokens but the pool holds only "
+                f"{self.ecfg.n_pages * self.ecfg.page_size}")
         req.arrived_at = time.perf_counter()
         self.waiting.push(0, req)
 
@@ -91,13 +129,19 @@ class ServingEngine:
         idle = np.nonzero(~self.active)[0]
         return int(idle[0]) if len(idle) else None
 
-    def _insert_cache(self, slot: int, caches):
-        """Scatter a batch-1 prefill cache into slot `slot`."""
-        def ins(dst, src):
-            return dst.at[slot].set(src[0].astype(dst.dtype))
-        self.state["caches"] = jax.tree.map(
-            lambda d, s: _tree_insert(d, s, slot),
-            self.state["caches"], caches)
+    def _tokens_needed(self, req: Request) -> int:
+        """Pages the admission gate must see free, in tokens.
+
+        Dense reserves the worst case (prompt + all new tokens) up front;
+        paged admits on the prompt footprint alone and grows on append —
+        this is the capacity win the MTT indirection buys. Both are
+        capped at cache_len: decode hard-stops there, so no request ever
+        touches more KV slots than that.
+        """
+        if self.paged:
+            return len(req.prompt) + 1
+        return min(len(req.prompt) + req.max_new_tokens,
+                   self.ecfg.cache_len)
 
     def _admit(self) -> int:
         admitted = 0
@@ -108,7 +152,7 @@ class ServingEngine:
             req: Optional[Request] = self.waiting.pop(0)
             if req is None:
                 break
-            n_tok = len(req.prompt) + req.max_new_tokens
+            n_tok = self._tokens_needed(req)
             if not self.pool.ensure_capacity(req.req_id, n_tok):
                 # no pages: try VoQ eviction of a parked candidate first
                 if not self._evict_someone(exclude=req.req_id):
@@ -119,6 +163,8 @@ class ServingEngine:
                     break
             self._prefill_into(slot, req)
             admitted += 1
+        if admitted and self.paged:
+            self._table_dirty = True
         return admitted
 
     def _prefill_into(self, slot: int, req: Request):
@@ -136,39 +182,71 @@ class ServingEngine:
             self.stats["prefills"] += 1
             self.stats["prefill_tokens"] += length
         req.tokens_out.append(first_tok)
-        self.state["caches"] = jax.tree.map(
-            lambda d, s: _tree_insert(d, s, slot), self.state["caches"],
-            caches)
+        if self.paged:
+            pages = self.pool.pages_of(req.req_id)
+            chunks = tf.dense_to_pages(caches, len(pages),
+                                       self.ecfg.page_size)
+            self.state["caches"] = tf.scatter_pages(
+                self.state["caches"], chunks, pages)
+        else:
+            self.state["caches"] = _slot_insert(
+                self.state["caches"], caches, slot)
         self.state["lengths"] = self.state["lengths"].at[slot].set(length)
         self.state["positions"] = self.state["positions"].at[slot].set(length)
         self.active[slot] = True
         self.running[slot] = True
         self.slot_req[slot] = req
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self.pool.n_used)
+
+    def _sync_page_table(self):
+        """Re-export the MTT rows for every slot into the decode state.
+
+        Callers mark ``_table_dirty`` instead of calling this directly;
+        step() syncs once per decode, however many admissions/parks/
+        growths the scheduling phase performed.
+        """
+        ids = [r.req_id if r is not None else None for r in self.slot_req]
+        self.state["page_table"] = jnp.asarray(
+            self.pool.table_matrix(ids, self.max_pages))
+        self._table_dirty = False
 
     # -- VoQ parking / eviction -------------------------------------------
     def _evict_someone(self, exclude: int) -> bool:
-        """Move the most recently admitted *running* sequence's pages to
-        the host tier; park it (non-blocking for everyone else)."""
-        if not self.ecfg.host_offload:
-            return False
+        """Park the most recently admitted *running* sequence: move its KV
+        to the host tier (non-blocking for everyone else)."""
         cands = [i for i in range(self.ecfg.slots)
                  if self.active[i] and self.running[i]
                  and self.slot_req[i] is not None
                  and self.slot_req[i].req_id != exclude]
         if not cands:
             return False
-        slot = cands[-1]
+        return self._park_slot(cands[-1])
+
+    def _park_slot(self, slot: int) -> bool:
+        if not self.ecfg.host_offload:
+            return False
         req = self.slot_req[slot]
-        caches = jax.tree.map(lambda c: np.asarray(c[slot]),
-                              self.state["caches"])
-        meta = (int(self.state["lengths"][slot]),
-                int(self.state["positions"][slot]), slot)
+        if req is None or not self.running[slot]:
+            return False
+        if self.paged:
+            page_ids = self.pool.pages_of(req.req_id)
+            caches = jax.tree.map(
+                np.asarray, tf.gather_pages(self.state["caches"], page_ids))
+            meta = (int(self.state["lengths"][slot]),
+                    int(self.state["positions"][slot]), slot, len(page_ids))
+        else:
+            caches = _slot_extract(self.state["caches"], slot)
+            meta = (int(self.state["lengths"][slot]),
+                    int(self.state["positions"][slot]), slot, 0)
         self.host_tier[req.req_id] = (caches, meta)
         nbytes = sum(c.nbytes for c in jax.tree.leaves(caches))
         self._park_ready[req.req_id] = (
             time.perf_counter() + self.ecfg.bus.transfer_time(nbytes))
         self.running[slot] = False
         self.pool.release(req.req_id)
+        if self.paged:
+            self._table_dirty = True
         self.stats["parked"] += 1
         return True
 
@@ -177,25 +255,107 @@ class ServingEngine:
         for req_id in list(self._park_ready):
             if self._park_ready[req_id] > now:
                 continue
-            caches, (length, pos, slot) = self.host_tier[req_id]
+            caches, (length, pos, slot, n_pages) = self.host_tier[req_id]
             req = self.slot_req[slot]
             if req is None or req.req_id != req_id or self.running[slot]:
                 continue
-            need = length + req.max_new_tokens - len(req.tokens_out)
-            if not self.pool.ensure_capacity(req_id, need):
-                continue
-            self.state["caches"] = jax.tree.map(
-                lambda d, s: _tree_insert(d, jnp.asarray(s)[None], slot),
-                self.state["caches"], caches)
+            if self.paged:
+                pages = self.pool.alloc(req_id, n_pages)
+                if pages is None:
+                    continue
+                self.state["caches"] = tf.scatter_pages(
+                    self.state["caches"], caches, pages)
+                self._table_dirty = True
+                self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                               self.pool.n_used)
+            else:
+                need = length + req.max_new_tokens - len(req.tokens_out)
+                if not self.pool.ensure_capacity(req_id, need):
+                    continue
+                self.state["caches"] = _slot_restore(
+                    self.state["caches"], caches, slot)
             self.running[slot] = True
             del self._park_ready[req_id]
             del self.host_tier[req_id]
             self.stats["unparked"] += 1
 
+    # -- paged growth ------------------------------------------------------
+    def _grow_tables(self):
+        """Alloc-on-append: claim a fresh page for every running slot whose
+        next token crosses a page boundary. When the pool is dry and nobody
+        is evictable the slot itself stops (per-connection blocking — the
+        rest of the batch keeps decoding): park to the host tier if one
+        exists, else *stall in place* (pages kept, slot frozen via the
+        active mask) until a release frees pages; if stalling would freeze
+        the whole batch (deadlock), preempt-restart the request instead
+        (release pages, requeue for fresh prefill — recompute preemption).
+        """
+        changed = False
+        positions = np.asarray(self.state["positions"])
+        for i in range(self.ecfg.slots):
+            req = self.slot_req[i]
+            if req is None or not self.active[i]:
+                continue
+            if not self.running[i]:
+                if req.req_id in self._stalled:
+                    before = len(self.pool.pages_of(req.req_id))
+                    if self.pool.ensure_capacity(req.req_id,
+                                                 int(positions[i]) + 1):
+                        self._stalled.discard(req.req_id)
+                        self.running[i] = True
+                        self.stats["page_allocs"] += (
+                            len(self.pool.pages_of(req.req_id)) - before)
+                        changed = True
+                continue
+            pos = int(positions[i])
+            before = len(self.pool.pages_of(req.req_id))
+            if self.pool.ensure_capacity(req.req_id, pos + 1):
+                grown = len(self.pool.pages_of(req.req_id)) - before
+                if grown:
+                    self.stats["page_allocs"] += grown
+                    changed = True
+                continue
+            if (self._evict_someone(exclude=req.req_id)
+                    and self.pool.ensure_capacity(req.req_id, pos + 1)):
+                self.stats["page_allocs"] += 1
+                changed = True
+                continue
+            changed = True
+            if self._park_slot(i):
+                continue
+            others_running = any(
+                self.running[j] for j in range(self.ecfg.slots) if j != i)
+            if others_running:
+                self._stalled.add(req.req_id)      # freeze; resume later
+                self.running[i] = False
+            else:
+                self._preempt_restart(i)           # avoid whole-batch stall
+        if changed:
+            self._table_dirty = True
+            self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                           self.pool.n_used)
+
+    def _preempt_restart(self, slot: int):
+        """Release a slot's pages and requeue its request from scratch
+        (recompute preemption — the no-host-tier escape hatch)."""
+        req = self.slot_req[slot]
+        self.pool.release(req.req_id)
+        self._stalled.discard(req.req_id)
+        req.tokens_out.clear()
+        self.active[slot] = False
+        self.running[slot] = False
+        self.slot_req[slot] = None
+        self.waiting.push(0, req)
+        self.stats["preempt_restarts"] += 1
+
     # -- main loop ---------------------------------------------------------
     def step(self):
         self._admit()
         self._try_unpark()
+        if self.paged:
+            self._grow_tables()
+            if self._table_dirty:
+                self._sync_page_table()
         if not self.active.any():
             return
         tokens = np.zeros(self.ecfg.slots, np.int32)
@@ -234,5 +394,47 @@ class ServingEngine:
         return self.completed
 
 
-def _tree_insert(dst, src, slot: int):
-    return dst.at[slot].set(src[0].astype(dst.dtype))
+# -- structure-aware slot insert / extract ---------------------------------
+#
+# Stack caches are {"prefix": [leaf trees with batch at axis 0],
+# "groups": leaf trees with a leading n_groups axis, batch at axis 1}.
+# Indexing every leaf at axis 0 (the seed's `_tree_insert`) silently hits
+# the *group* axis of scanned leaves; these helpers pick the batch axis by
+# subtree, which the paged-vs-dense equivalence test pins down.
+
+def _slot_set(dst, src, slot: int, pre_slice, grp_slice):
+    """Write per-slot data into every leaf, batch axis chosen by subtree."""
+
+    def pre(d, s):
+        return d.at[slot].set(jnp.asarray(pre_slice(s)).astype(d.dtype))
+
+    def grp(d, s):
+        return d.at[:, slot].set(jnp.asarray(grp_slice(s)).astype(d.dtype))
+
+    out = {"prefix": [jax.tree.map(pre, d, s)
+                      for d, s in zip(dst["prefix"], src["prefix"])],
+           "groups": None}
+    if dst.get("groups") is not None:
+        out["groups"] = jax.tree.map(grp, dst["groups"], src["groups"])
+    return out
+
+
+def _slot_insert(dst, src, slot: int):
+    """Insert a batch-1 cache tree `src` into slot `slot` of `dst`."""
+    return _slot_set(dst, src, slot, lambda s: s[0], lambda s: s[:, 0])
+
+
+def _slot_restore(dst, src, slot: int):
+    """Insert a batch-free extracted tree (from _slot_extract) back."""
+    return _slot_set(dst, src, slot, lambda s: s, lambda s: s)
+
+
+def _slot_extract(tree, slot: int):
+    """Pull slot `slot` out of every leaf (host numpy copies)."""
+    return {
+        "prefix": [jax.tree.map(lambda c: np.asarray(c[slot]), t)
+                   for t in tree["prefix"]],
+        "groups": (jax.tree.map(lambda c: np.asarray(c[:, slot]),
+                                tree["groups"])
+                   if tree.get("groups") is not None else None),
+    }

@@ -1,4 +1,5 @@
-"""Prefix cache — the in-network Key-Value cache (paper §4.5.2), reframed.
+"""Prefix cache — the in-network Key-Value cache (paper §4.5.2), reframed
+(DESIGN.md §2, §5).
 
 The paper's KV-store NIC answers GETs from a hash pipeline; the serving
 analogue caches *prompt KV state* keyed by a content hash so repeated

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.multiqueue import HostMultiQueue, batched_enqueue, mq_init, \
     mq_pop, mq_push
