@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench quickstart
+.PHONY: test bench-smoke bench-sched bench quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -10,6 +10,9 @@ test:
 bench-smoke:
 	$(PY) benchmarks/kv_scaling.py --mode paged
 	$(PY) benchmarks/kv_scaling.py --mode hash
+
+bench-sched:
+	$(PY) benchmarks/scheduler_qos.py
 
 bench:
 	$(PY) benchmarks/run.py

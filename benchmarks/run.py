@@ -11,12 +11,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import (building_blocks, e2e, kv_scaling,
-                            module_footprint, reliability, resource_miss)
+                            module_footprint, reliability, resource_miss,
+                            scheduler_qos)
     sections = [
         ("table3_building_blocks", building_blocks.run),
         ("table2_module_footprint", module_footprint.run),
         ("fig12_resource_miss", resource_miss.run),
         ("fig13_kv_scaling", kv_scaling.run),
+        ("sec4_qos_scheduler", scheduler_qos.run),
         ("sec6.1_reliability_gbn_sr", reliability.run),
         ("fig14_e2e_prototype", e2e.run),
     ]

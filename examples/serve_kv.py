@@ -1,9 +1,12 @@
 """Serving example — the paper's in-network KV-store reference design,
 reframed: continuous batching + paged KV accounting + prefix cache + VoQ
-parking under page pressure.
+parking under page pressure, with subsystems picked by name through the
+pluggable API (DESIGN.md §2).
 
   PYTHONPATH=src python examples/serve_kv.py
+  PYTHONPATH=src python examples/serve_kv.py --scheduler priority
 """
+import argparse
 import time
 
 import jax
@@ -11,27 +14,35 @@ import numpy as np
 
 from repro.configs.registry import SMOKE_CONFIGS
 from repro.models import lm
-from repro.serve.engine import EngineConfig, Request, ServingEngine
+from repro.serve.api import EngineConfig, Request, make_engine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scheduler", default="fcfs",
+                    help="fcfs | priority | round_robin")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="paged")
+    args = ap.parse_args()
+
     cfg = SMOKE_CONFIGS["qwen3-8b"]
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     # paged layout: KV lives in a shared page pool behind per-slot page
     # tables (DESIGN.md §3); the deliberately tight page budget exercises
     # alloc-on-append growth and VoQ parking/eviction
-    eng = ServingEngine(cfg, params, EngineConfig(
+    eng = make_engine(cfg, params, EngineConfig(
         slots=4, cache_len=128, n_pages=28, page_size=8, eos_token=-1,
-        kv_layout="paged"))
+        kv_layout=args.kv_layout, scheduler=args.scheduler, qos_classes=2))
 
     rng = np.random.default_rng(0)
     base_prompt = rng.integers(1, cfg.vocab_size, size=24).astype(np.int32)
     reqs = []
     for i in range(10):
-        # half the requests share a prompt -> prefix-cache hits
+        # half the requests share a prompt -> prefix-cache hits; odd ids
+        # get the lower QoS class (only matters to class-aware schedulers)
         p = base_prompt if i % 2 == 0 else rng.integers(
             1, cfg.vocab_size, size=int(rng.integers(8, 40))).astype(np.int32)
-        r = Request(i, p, max_new_tokens=10)
+        r = Request(i, p, max_new_tokens=10, qos=i % 2)
         reqs.append(r)
         eng.submit(r)
 
@@ -39,10 +50,13 @@ def main():
     done = eng.run_until_done()
     dt = time.perf_counter() - t0
 
-    print(f"completed {len(done)}/10 in {dt:.1f}s")
+    print(f"completed {len(done)}/10 in {dt:.1f}s  "
+          f"[{args.kv_layout} kv, {args.scheduler} scheduler]")
     print(f"decode tokens/s: {eng.stats['decode_tokens'] / dt:.1f}")
     print("engine stats:", eng.stats)
     print(f"prefix-cache hit rate: {eng.prefix.hit_rate:.2f}")
+    print("completion order (req_id:qos):",
+          " ".join(f"{r.req_id}:{r.qos}" for r in done))
     same = [tuple(r.tokens_out) for r in done if r.req_id % 2 == 0]
     print("shared-prompt outputs identical:", len(set(same)) == 1)
 

@@ -86,6 +86,32 @@ class HostMultiQueue:
                 return out
             out.append(item)
 
+    # -- QoS pop helpers (paper Fig 9: class queues share one pool) -----
+    @property
+    def total_len(self) -> int:
+        return int(self._len.sum())
+
+    def pop_first(self) -> Tuple[Optional[Any], int]:
+        """Strict-priority pop: first non-empty queue in index order
+        (lower index = higher class). Returns (item, q) or (None, -1)
+        when every queue is empty."""
+        for q in range(self.n_queues):
+            item = self.pop(q)
+            if item is not None:
+                return item, q
+        return None, -1
+
+    def pop_round_robin(self, start: int = 0
+                        ) -> Tuple[Optional[Any], int]:
+        """Fair pop: first non-empty queue scanning cyclically from
+        `start`. Returns (item, q) or (None, -1)."""
+        for i in range(self.n_queues):
+            q = (start + i) % self.n_queues
+            item = self.pop(q)
+            if item is not None:
+                return item, q
+        return None, -1
+
 
 # --------------------------------------------------------------------------
 # in-graph multiqueue (pure JAX, static shapes)

@@ -1,7 +1,9 @@
 """Serving launcher (the in-network KV-store reference design analogue).
 
+Subsystems are selected by name through the pluggable API (DESIGN.md §2):
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-      --requests 8
+      --requests 8 --kv-layout paged --scheduler priority
 """
 from __future__ import annotations
 
@@ -13,7 +15,8 @@ import numpy as np
 
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.models import lm
-from repro.serve.engine import EngineConfig, Request, ServingEngine
+from repro.serve.api import (EngineConfig, Request, default_page_budget,
+                             make_engine)
 
 
 def main():
@@ -24,25 +27,43 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=160)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense", help="KVBackend name")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="device page budget; 0 derives it from "
+                         "slots/cache-len/page-size")
+    ap.add_argument("--scheduler", default="fcfs",
+                    help="Scheduler name (fcfs | priority | round_robin "
+                         "| any registered third-party name)")
+    ap.add_argument("--qos-classes", type=int, default=2,
+                    help="QoS classes; requests get class i %% N")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, EngineConfig(
+    n_pages = args.n_pages or default_page_budget(
+        args.slots, args.cache_len, args.page_size)
+    eng = make_engine(cfg, params, EngineConfig(
         slots=args.slots, cache_len=args.cache_len,
-        n_pages=args.slots * args.cache_len // 16 + 16, page_size=16,
-        eos_token=-1))
+        n_pages=n_pages, page_size=args.page_size,
+        kv_layout=args.kv_layout, scheduler=args.scheduler,
+        qos_classes=args.qos_classes, eos_token=-1))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(i, rng.integers(
             1, cfg.vocab_size,
             size=int(rng.integers(8, 48))).astype(np.int32),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new, qos=i % args.qos_classes))
     t0 = time.perf_counter()
     done = eng.run_until_done()
     dt = time.perf_counter() - t0
     print(f"completed {len(done)}/{args.requests} in {dt:.1f}s  "
-          f"({eng.stats['decode_tokens'] / dt:.1f} decode tok/s)")
+          f"({eng.stats['decode_tokens'] / dt:.1f} decode tok/s)  "
+          f"[{args.kv_layout} kv, {args.scheduler} scheduler, "
+          f"{n_pages} pages]")
+    print("completion order (req_id:qos):",
+          " ".join(f"{r.req_id}:{r.qos}" for r in done))
     print("stats:", eng.stats)
 
 

@@ -1,1 +1,6 @@
-from repro.serve.engine import EngineConfig, Request, ServingEngine  # noqa
+from repro.serve.api import (EngineConfig, KVBackend, ParkingTransport,  # noqa
+                             ParkMeta, Request, Scheduler,
+                             default_page_budget, make_engine,
+                             make_kv_backend, make_scheduler,
+                             register_kv_backend, register_scheduler)
+from repro.serve.engine import ServingEngine  # noqa

@@ -1,0 +1,204 @@
+"""Pluggable serving subsystem API (DESIGN.md §2).
+
+JingZhao's pitch is a fixed frame with swappable subsystems: prototype the
+Queue / Resource / Transport machinery once, then drop new network
+functions into stable interfaces. This module is that frame for the
+serving engine. `ServingEngine` (serve/engine.py) is a thin driver over
+three protocols, each the serving analogue of a paper subsystem:
+
+  Scheduler        <- Queue Subsystem   (doorbell -> WQE dispatch, QoS
+                      classes over a real N-queue HostMultiQueue)
+  KVBackend        <- Resource Subsystem (MTT/page accounting + the KV
+                      memory layout: dense slabs or the paged pool)
+  ParkingTransport <- Transport Subsystem (host-tier park/restore moves
+                      with BusModel timing, the VoQ overflow path)
+
+Implementations register by name (`register_scheduler`,
+`register_kv_backend`) so launchers, benchmarks, and third-party code
+select parts with a string — adding a scheduling policy or KV layout is
+a plug-in, not an engine edit. serve/schedulers.py, serve/kv_backends.py
+and serve/parking.py hold the built-ins; `make_engine` wires a full
+engine from an `EngineConfig`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Protocol, Tuple, Type, runtime_checkable)
+
+import numpy as np
+
+from repro.core.resource import BusModel
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    qos: int = 0                  # QoS class; 0 = highest priority
+    arrived_at: float = 0.0
+    tokens_out: List[int] = field(default_factory=list)
+    finished_at: Optional[float] = None
+
+
+@dataclass
+class EngineConfig:
+    slots: int = 4
+    cache_len: int = 256
+    page_size: int = 16
+    n_pages: int = 256            # device page budget (admission control)
+    prefix_cache_entries: int = 32
+    eos_token: int = 0
+    host_offload: bool = True     # VoQ overflow tier
+    kv_layout: str = "dense"      # KVBackend name: "dense" | "paged"
+    scheduler: str = "fcfs"       # Scheduler name: "fcfs" | "priority" | ...
+    qos_classes: int = 4          # queues a multi-class scheduler exposes
+    queue_capacity: int = 1 << 12
+    bus: BusModel = field(default_factory=BusModel)
+
+
+class ParkMeta(NamedTuple):
+    """Restore metadata a KVBackend attaches to parked KV state."""
+    length: int
+    position: int
+    slot: int
+    n_pages: int                  # 0 for layouts without page indirection
+
+
+# --------------------------------------------------------------------------
+# protocols
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Queue Subsystem: admission order over QoS class queues.
+
+    The engine rings the doorbell with `submit`, pops the next WQE with
+    `next`, and returns work it could not place with `requeue` — which
+    MUST preserve the request's original QoS class (a requeued request
+    is not a new arrival).
+    """
+    n_classes: int
+
+    def class_of(self, req: Request) -> int: ...
+    def submit(self, req: Request) -> bool: ...
+    def next(self) -> Optional[Request]: ...
+    def requeue(self, req: Request) -> bool: ...
+    @property
+    def pending(self) -> int: ...
+
+
+@runtime_checkable
+class KVBackend(Protocol):
+    """Resource Subsystem: KV memory layout + page accounting.
+
+    Owns the PagePool (the MTT) and every layout-specific state
+    operation; the engine never branches on the layout. `append` is
+    alloc-on-append capacity growth (also used to reserve the admission
+    `footprint`); `sync` re-exports indirection tables into the decode
+    state when they changed and is a no-op otherwise.
+    """
+    needs_growth: bool            # True if capacity can run out mid-decode
+    pool: Any                     # PagePool (admission accounting)
+
+    def init_state(self) -> dict: ...
+    def footprint(self, req: Request) -> int: ...
+    def append(self, req_id: int, n_tokens: int) -> bool: ...
+    def held(self, req_id: int) -> int: ...
+    def prefill_into_slot(self, state: dict, slot: int, req_id: int,
+                          caches, length: int) -> dict: ...
+    def park(self, state: dict, slot: int,
+             req_id: int) -> Tuple[Any, ParkMeta]: ...
+    def unpark(self, state: dict, slot: int, req: Request, caches,
+               meta: ParkMeta) -> Tuple[bool, dict]: ...
+    def release(self, req_id: int) -> None: ...
+    def mark_dirty(self) -> None: ...
+    def sync(self, state: dict,
+             slot_req_ids: List[Optional[int]]) -> dict: ...
+
+
+@runtime_checkable
+class ParkingTransport(Protocol):
+    """Transport Subsystem: the host-tier move/restore channel.
+
+    `begin` starts an eviction transfer (completion time modeled by the
+    bus), `ready` lists transfers whose data is back-restorable, `peek`
+    reads a parked entry, `complete` retires it after a successful
+    unpark. `in_flight` counts parked entries (the engine's drain
+    condition).
+    """
+
+    def begin(self, req_id: int, caches, meta: ParkMeta) -> None: ...
+    def ready(self, now: Optional[float] = None) -> List[int]: ...
+    def peek(self, req_id: int) -> Tuple[Any, ParkMeta]: ...
+    def complete(self, req_id: int) -> None: ...
+    @property
+    def in_flight(self) -> int: ...
+
+
+# --------------------------------------------------------------------------
+# registries — new subsystems plug in by name
+# --------------------------------------------------------------------------
+
+SCHEDULERS: Dict[str, Type] = {}
+KV_BACKENDS: Dict[str, Type] = {}
+
+
+def register_scheduler(name: str) -> Callable[[Type], Type]:
+    def deco(cls: Type) -> Type:
+        cls.name = name
+        SCHEDULERS[name] = cls
+        return cls
+    return deco
+
+
+def register_kv_backend(name: str) -> Callable[[Type], Type]:
+    def deco(cls: Type) -> Type:
+        cls.name = name
+        KV_BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def make_scheduler(name: str, n_classes: int = 4,
+                   capacity: int = 1 << 12) -> Scheduler:
+    from repro.serve import schedulers  # noqa: F401  (registers built-ins)
+    if name not in SCHEDULERS:
+        raise ValueError(f"unknown scheduler {name!r}; "
+                         f"registered: {sorted(SCHEDULERS)}")
+    return SCHEDULERS[name](n_classes=n_classes, capacity=capacity)
+
+
+def make_kv_backend(name: str, cfg, ecfg: EngineConfig) -> KVBackend:
+    from repro.serve import kv_backends  # noqa: F401  (registers built-ins)
+    if name not in KV_BACKENDS:
+        raise ValueError(f"unknown kv layout {name!r}; "
+                         f"registered: {sorted(KV_BACKENDS)}")
+    return KV_BACKENDS[name](cfg, ecfg)
+
+
+def make_engine(cfg, params, ecfg: EngineConfig, policy=None,
+                scheduler: Optional[Scheduler] = None,
+                kv_backend: Optional[KVBackend] = None,
+                transport: Optional[ParkingTransport] = None):
+    """Build a ServingEngine with parts resolved by name from `ecfg`
+    (or injected directly for third-party subsystems)."""
+    from repro.serve.engine import ServingEngine
+    from repro.sharding.policy import NULL_POLICY
+    return ServingEngine(cfg, params, ecfg,
+                         policy=policy if policy is not None else NULL_POLICY,
+                         scheduler=scheduler, kv_backend=kv_backend,
+                         transport=transport)
+
+
+def default_page_budget(slots: int, cache_len: int, page_size: int,
+                        slack_slots: int = 1) -> int:
+    """Device page budget backing `slots` worst-case sequences.
+
+    One full dense reservation per slot plus `slack_slots` slots' worth
+    of headroom so an unpark re-allocation never deadlocks against a
+    fully-committed pool.
+    """
+    per_slot = -(-cache_len // page_size)
+    return (slots + slack_slots) * per_slot

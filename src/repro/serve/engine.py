@@ -1,99 +1,70 @@
-"""Continuous-batching serving engine — the Queue + Resource subsystems.
+"""Continuous-batching serving engine — a thin driver over the pluggable
+subsystem API (serve/api.py; DESIGN.md §2, §3).
 
-JingZhao mapping (DESIGN.md §2, §3):
-  Queue Subsystem    -> request queue (HostMultiQueue), slot scheduler
-                        (doorbell = request arrival; WQE = work item)
-  Resource Subsystem -> KV page accounting (PagePool = MTT) and, with
-                        ``kv_layout="paged"``, the *actual* memory layout:
-                        every layer's KV lives in one shared
-                        [n_pages, page_size, KV, hd] pool and sequences
-                        reach their tokens only through per-slot page
-                        tables, so admission is by real free pages and
-                        growth is alloc-on-append at page-boundary
-                        crossings. Host-DRAM overflow with **VoQ
-                        non-blocking parking**: a sequence whose pages are
-                        off-device is parked (its slot stays frozen via
-                        the decode `active` mask) while every other
-                        sequence keeps decoding.
-  Semantics          -> whichever of the 10 architectures is loaded
-  Transport          -> (serving) retry/requeue of parked work
+JingZhao mapping: the engine is the fixed frame; the subsystems plug in
+behind protocols and are selected by name through `EngineConfig`:
 
-The engine is exact (not a simulation): parked slots' caches are
-bit-frozen, evicted KV really moves to host numpy arrays and back — in
-dense mode as whole per-slot slabs, in paged mode page-by-page
-(DESIGN.md §3.3 state machine).
+  Scheduler        (Queue Subsystem)    -> admission/ordering over QoS
+                   class queues: fcfs | priority | round_robin
+                   (serve/schedulers.py)
+  KVBackend        (Resource Subsystem) -> KV layout + page accounting:
+                   dense slabs | paged pool behind MTT rows
+                   (serve/kv_backends.py)
+  ParkingTransport (Transport Subsystem)-> host-tier VoQ overflow moves,
+                   bus-timed (serve/parking.py)
+
+The engine loop itself is layout- and policy-free: admit from the
+scheduler, restore due unparks, run the backend's alloc-on-append pass,
+sync indirection tables, decode one step with the active mask freezing
+parked slots. The engine is exact (not a simulation): parked slots'
+caches are bit-frozen, evicted KV really moves to host numpy arrays and
+back.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.multiqueue import HostMultiQueue
-from repro.core.resource import BusModel, PagePool
 from repro.models import lm
-from repro.models import transformer as tf
+from repro.serve.api import (EngineConfig, KVBackend, ParkingTransport,
+                             Request, Scheduler, make_kv_backend,
+                             make_scheduler)
+# Re-exports: the public request/config types live in serve/api.py and the
+# slot helpers in serve/kv_backends.py; older call sites import them here.
+from repro.serve.kv_backends import (_slot_extract, _slot_insert,  # noqa: F401
+                                     _slot_restore, _slot_set)
+from repro.serve.parking import HostParkingTransport
 from repro.serve.prefix_cache import PrefixCache
 from repro.sharding.policy import NULL_POLICY, Policy
 
 
-@dataclass
-class Request:
-    req_id: int
-    prompt: np.ndarray
-    max_new_tokens: int = 32
-    arrived_at: float = 0.0
-    tokens_out: List[int] = field(default_factory=list)
-    finished_at: Optional[float] = None
-
-
-@dataclass
-class EngineConfig:
-    slots: int = 4
-    cache_len: int = 256
-    page_size: int = 16
-    n_pages: int = 256            # device page budget (admission control)
-    prefix_cache_entries: int = 32
-    eos_token: int = 0
-    host_offload: bool = True     # VoQ overflow tier
-    kv_layout: str = "dense"      # "dense" per-slot slabs | "paged" pool
-    bus: BusModel = field(default_factory=BusModel)
-
-
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
-                 policy: Policy = NULL_POLICY):
+                 policy: Policy = NULL_POLICY,
+                 scheduler: Optional[Scheduler] = None,
+                 kv_backend: Optional[KVBackend] = None,
+                 transport: Optional[ParkingTransport] = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.policy = policy
         B, L = ecfg.slots, ecfg.cache_len
-        self.paged = ecfg.kv_layout == "paged"
-        if self.paged:
-            if L % ecfg.page_size:
-                raise ValueError("cache_len must be a page_size multiple")
-            self.max_pages = L // ecfg.page_size
-            self.state = lm.init_paged_serve_state(
-                cfg, B, ecfg.n_pages, ecfg.page_size, self.max_pages)
-        elif ecfg.kv_layout != "dense":
-            raise ValueError(ecfg.kv_layout)
-        else:
-            self.state = lm.init_serve_state(cfg, B, L, filled=False)
+        self.kv = kv_backend or make_kv_backend(ecfg.kv_layout, cfg, ecfg)
+        self.state = self.kv.init_state()
+        self.sched = scheduler or make_scheduler(
+            ecfg.scheduler, n_classes=ecfg.qos_classes,
+            capacity=ecfg.queue_capacity)
+        self.transport = transport or HostParkingTransport(ecfg.bus)
         self.active = np.zeros(B, bool)          # slot has a sequence
         self.running = np.zeros(B, bool)         # not parked
         self.slot_req: List[Optional[Request]] = [None] * B
-        self.waiting = HostMultiQueue(1, capacity=1 << 12)
-        self.pool = PagePool(ecfg.n_pages, ecfg.page_size)
         self.prefix = PrefixCache(ecfg.prefix_cache_entries)
-        self.host_tier: Dict[int, tuple] = {}    # req_id -> (caches, meta)
-        self._park_ready: Dict[int, float] = {}  # req_id -> upload done time
         self._stalled: set = set()               # req_ids frozen in place
-        self._table_dirty = False                # MTT rows need re-export
         self.completed: List[Request] = []
         self.stats = {"decode_steps": 0, "decode_tokens": 0, "prefills": 0,
                       "prefill_tokens": 0, "parked": 0, "unparked": 0,
@@ -104,6 +75,11 @@ class ServingEngine:
             lambda p, t, s, a: lm.decode_step(p, t, s, cfg, policy, active=a))
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, t, cfg, policy, cache_len=L))
+
+    @property
+    def pool(self):
+        """The KVBackend's PagePool (MTT accounting), for introspection."""
+        return self.kv.pool
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -122,26 +98,15 @@ class ServingEngine:
                 f"request needs {worst} KV tokens but the pool holds only "
                 f"{self.ecfg.n_pages * self.ecfg.page_size}")
         req.arrived_at = time.perf_counter()
-        self.waiting.push(0, req)
+        if not self.sched.submit(req):
+            raise RuntimeError(
+                f"scheduler queue full (capacity "
+                f"{self.ecfg.queue_capacity}); request {req.req_id} rejected")
 
     # -- slot management -------------------------------------------------
     def _free_slot(self) -> Optional[int]:
         idle = np.nonzero(~self.active)[0]
         return int(idle[0]) if len(idle) else None
-
-    def _tokens_needed(self, req: Request) -> int:
-        """Pages the admission gate must see free, in tokens.
-
-        Dense reserves the worst case (prompt + all new tokens) up front;
-        paged admits on the prompt footprint alone and grows on append —
-        this is the capacity win the MTT indirection buys. Both are
-        capped at cache_len: decode hard-stops there, so no request ever
-        touches more KV slots than that.
-        """
-        if self.paged:
-            return len(req.prompt) + 1
-        return min(len(req.prompt) + req.max_new_tokens,
-                   self.ecfg.cache_len)
 
     def _admit(self) -> int:
         admitted = 0
@@ -149,22 +114,22 @@ class ServingEngine:
             slot = self._free_slot()
             if slot is None:
                 break
-            req: Optional[Request] = self.waiting.pop(0)
+            req: Optional[Request] = self.sched.next()
             if req is None:
                 break
-            n_tok = self._tokens_needed(req)
-            if not self.pool.ensure_capacity(req.req_id, n_tok):
-                # no pages: try VoQ eviction of a parked candidate first
-                if not self._evict_someone(exclude=req.req_id):
-                    self.waiting.push(0, req)     # requeue; others proceed
+            n_tok = self.kv.footprint(req)
+            if not self.kv.append(req.req_id, n_tok):
+                # no pages: try VoQ eviction of a same-or-lower-priority
+                # victim first (never park a higher class for this one)
+                if not self._evict_someone(exclude=req.req_id,
+                                           for_class=self.sched.class_of(req)):
+                    self._requeue(req)            # requeue; others proceed
                     break
-                if not self.pool.ensure_capacity(req.req_id, n_tok):
-                    self.waiting.push(0, req)
+                if not self.kv.append(req.req_id, n_tok):
+                    self._requeue(req)
                     break
             self._prefill_into(slot, req)
             admitted += 1
-        if admitted and self.paged:
-            self._table_dirty = True
         return admitted
 
     def _prefill_into(self, slot: int, req: Request):
@@ -182,15 +147,8 @@ class ServingEngine:
             self.stats["prefills"] += 1
             self.stats["prefill_tokens"] += length
         req.tokens_out.append(first_tok)
-        if self.paged:
-            pages = self.pool.pages_of(req.req_id)
-            chunks = tf.dense_to_pages(caches, len(pages),
-                                       self.ecfg.page_size)
-            self.state["caches"] = tf.scatter_pages(
-                self.state["caches"], chunks, pages)
-        else:
-            self.state["caches"] = _slot_insert(
-                self.state["caches"], caches, slot)
+        self.state = self.kv.prefill_into_slot(
+            self.state, slot, req.req_id, caches, length)
         self.state["lengths"] = self.state["lengths"].at[slot].set(length)
         self.state["positions"] = self.state["positions"].at[slot].set(length)
         self.active[slot] = True
@@ -199,29 +157,36 @@ class ServingEngine:
         self.stats["pages_peak"] = max(self.stats["pages_peak"],
                                        self.pool.n_used)
 
-    def _sync_page_table(self):
-        """Re-export the MTT rows for every slot into the decode state.
-
-        Callers mark ``_table_dirty`` instead of calling this directly;
-        step() syncs once per decode, however many admissions/parks/
-        growths the scheduling phase performed.
-        """
-        ids = [r.req_id if r is not None else None for r in self.slot_req]
-        self.state["page_table"] = jnp.asarray(
-            self.pool.table_matrix(ids, self.max_pages))
-        self._table_dirty = False
+    def _requeue(self, req: Request):
+        """Return bounced work to its class queue; a lost request is an
+        invariant break (its pages/slot are already released), so a full
+        pool is fatal rather than silent."""
+        if not self.sched.requeue(req):
+            raise RuntimeError(
+                f"scheduler queue full on requeue; request {req.req_id} "
+                f"would be lost")
 
     # -- VoQ parking / eviction -------------------------------------------
-    def _evict_someone(self, exclude: int) -> bool:
-        """Park the most recently admitted *running* sequence: move its KV
-        to the host tier (non-blocking for everyone else)."""
+    def _evict_someone(self, exclude: int,
+                       for_class: Optional[int] = None) -> bool:
+        """Park a running sequence: move its KV to the host tier
+        (non-blocking for everyone else). The victim is drawn from the
+        lowest QoS class present (most recently admitted on ties), and
+        when `for_class` is given, never from a class above it — the
+        Resource tier must not invert the Queue tier's priorities."""
         cands = [i for i in range(self.ecfg.slots)
                  if self.active[i] and self.running[i]
                  and self.slot_req[i] is not None
                  and self.slot_req[i].req_id != exclude]
+        if for_class is not None:
+            cands = [i for i in cands
+                     if self.sched.class_of(self.slot_req[i]) >= for_class]
         if not cands:
             return False
-        return self._park_slot(cands[-1])
+        worst = max(self.sched.class_of(self.slot_req[i]) for i in cands)
+        victim = [i for i in cands
+                  if self.sched.class_of(self.slot_req[i]) == worst][-1]
+        return self._park_slot(victim)
 
     def _park_slot(self, slot: int) -> bool:
         if not self.ecfg.host_offload:
@@ -229,58 +194,31 @@ class ServingEngine:
         req = self.slot_req[slot]
         if req is None or not self.running[slot]:
             return False
-        if self.paged:
-            page_ids = self.pool.pages_of(req.req_id)
-            caches = jax.tree.map(
-                np.asarray, tf.gather_pages(self.state["caches"], page_ids))
-            meta = (int(self.state["lengths"][slot]),
-                    int(self.state["positions"][slot]), slot, len(page_ids))
-        else:
-            caches = _slot_extract(self.state["caches"], slot)
-            meta = (int(self.state["lengths"][slot]),
-                    int(self.state["positions"][slot]), slot, 0)
-        self.host_tier[req.req_id] = (caches, meta)
-        nbytes = sum(c.nbytes for c in jax.tree.leaves(caches))
-        self._park_ready[req.req_id] = (
-            time.perf_counter() + self.ecfg.bus.transfer_time(nbytes))
+        caches, meta = self.kv.park(self.state, slot, req.req_id)
+        self.transport.begin(req.req_id, caches, meta)
         self.running[slot] = False
-        self.pool.release(req.req_id)
-        if self.paged:
-            self._table_dirty = True
         self.stats["parked"] += 1
         return True
 
     def _try_unpark(self):
-        now = time.perf_counter()
-        for req_id in list(self._park_ready):
-            if self._park_ready[req_id] > now:
+        for req_id in self.transport.ready():
+            caches, meta = self.transport.peek(req_id)
+            req = self.slot_req[meta.slot]
+            if (req is None or req.req_id != req_id
+                    or self.running[meta.slot]):
                 continue
-            caches, (length, pos, slot, n_pages) = self.host_tier[req_id]
-            req = self.slot_req[slot]
-            if req is None or req.req_id != req_id or self.running[slot]:
-                continue
-            if self.paged:
-                pages = self.pool.alloc(req_id, n_pages)
-                if pages is None:
-                    continue
-                self.state["caches"] = tf.scatter_pages(
-                    self.state["caches"], caches, pages)
-                self._table_dirty = True
-                self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                               self.pool.n_used)
-            else:
-                need = length + req.max_new_tokens - len(req.tokens_out)
-                if not self.pool.ensure_capacity(req_id, need):
-                    continue
-                self.state["caches"] = _slot_restore(
-                    self.state["caches"], caches, slot)
-            self.running[slot] = True
-            del self._park_ready[req_id]
-            del self.host_tier[req_id]
+            ok, self.state = self.kv.unpark(
+                self.state, meta.slot, req, caches, meta)
+            if not ok:
+                continue                     # no pages yet; retry later
+            self.running[meta.slot] = True
+            self.transport.complete(req_id)
             self.stats["unparked"] += 1
+            self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                           self.pool.n_used)
 
-    # -- paged growth ------------------------------------------------------
-    def _grow_tables(self):
+    # -- capacity growth ---------------------------------------------------
+    def _grow(self):
         """Alloc-on-append: claim a fresh page for every running slot whose
         next token crosses a page boundary. When the pool is dry and nobody
         is evictable the slot itself stops (per-connection blocking — the
@@ -298,25 +236,25 @@ class ServingEngine:
                 continue
             if not self.running[i]:
                 if req.req_id in self._stalled:
-                    before = len(self.pool.pages_of(req.req_id))
-                    if self.pool.ensure_capacity(req.req_id,
-                                                 int(positions[i]) + 1):
+                    before = self.kv.held(req.req_id)
+                    if self.kv.append(req.req_id, int(positions[i]) + 1):
                         self._stalled.discard(req.req_id)
                         self.running[i] = True
                         self.stats["page_allocs"] += (
-                            len(self.pool.pages_of(req.req_id)) - before)
+                            self.kv.held(req.req_id) - before)
                         changed = True
                 continue
             pos = int(positions[i])
-            before = len(self.pool.pages_of(req.req_id))
-            if self.pool.ensure_capacity(req.req_id, pos + 1):
-                grown = len(self.pool.pages_of(req.req_id)) - before
+            before = self.kv.held(req.req_id)
+            if self.kv.append(req.req_id, pos + 1):
+                grown = self.kv.held(req.req_id) - before
                 if grown:
                     self.stats["page_allocs"] += grown
                     changed = True
                 continue
-            if (self._evict_someone(exclude=req.req_id)
-                    and self.pool.ensure_capacity(req.req_id, pos + 1)):
+            if (self._evict_someone(exclude=req.req_id,
+                                    for_class=self.sched.class_of(req))
+                    and self.kv.append(req.req_id, pos + 1)):
                 self.stats["page_allocs"] += 1
                 changed = True
                 continue
@@ -331,31 +269,34 @@ class ServingEngine:
             else:
                 self._preempt_restart(i)           # avoid whole-batch stall
         if changed:
-            self._table_dirty = True
+            self.kv.mark_dirty()
             self.stats["pages_peak"] = max(self.stats["pages_peak"],
                                            self.pool.n_used)
 
     def _preempt_restart(self, slot: int):
         """Release a slot's pages and requeue its request from scratch
-        (recompute preemption — the no-host-tier escape hatch)."""
+        (recompute preemption — the no-host-tier escape hatch). The
+        request keeps its QoS class: requeue routes through the
+        scheduler's class mapping, not queue 0."""
         req = self.slot_req[slot]
-        self.pool.release(req.req_id)
+        self.kv.release(req.req_id)
         self._stalled.discard(req.req_id)
         req.tokens_out.clear()
         self.active[slot] = False
         self.running[slot] = False
         self.slot_req[slot] = None
-        self.waiting.push(0, req)
+        self._requeue(req)
         self.stats["preempt_restarts"] += 1
 
     # -- main loop ---------------------------------------------------------
     def step(self):
         self._admit()
         self._try_unpark()
-        if self.paged:
-            self._grow_tables()
-            if self._table_dirty:
-                self._sync_page_table()
+        if self.kv.needs_growth:
+            self._grow()
+        self.state = self.kv.sync(
+            self.state,
+            [r.req_id if r is not None else None for r in self.slot_req])
         if not self.active.any():
             return
         tokens = np.zeros(self.ecfg.slots, np.int32)
@@ -380,61 +321,15 @@ class ServingEngine:
             if done:
                 req.finished_at = time.perf_counter()
                 self.completed.append(req)
-                self.pool.release(req.req_id)
+                self.kv.release(req.req_id)
                 self.active[i] = False
                 self.running[i] = False
                 self.slot_req[i] = None
 
     def run_until_done(self, max_steps: int = 10_000):
         for _ in range(max_steps):
-            if (not self.active.any() and self.waiting.qlen(0) == 0
-                    and not self.host_tier):
+            if (not self.active.any() and self.sched.pending == 0
+                    and self.transport.in_flight == 0):
                 break
             self.step()
         return self.completed
-
-
-# -- structure-aware slot insert / extract ---------------------------------
-#
-# Stack caches are {"prefix": [leaf trees with batch at axis 0],
-# "groups": leaf trees with a leading n_groups axis, batch at axis 1}.
-# Indexing every leaf at axis 0 (the seed's `_tree_insert`) silently hits
-# the *group* axis of scanned leaves; these helpers pick the batch axis by
-# subtree, which the paged-vs-dense equivalence test pins down.
-
-def _slot_set(dst, src, slot: int, pre_slice, grp_slice):
-    """Write per-slot data into every leaf, batch axis chosen by subtree."""
-
-    def pre(d, s):
-        return d.at[slot].set(jnp.asarray(pre_slice(s)).astype(d.dtype))
-
-    def grp(d, s):
-        return d.at[:, slot].set(jnp.asarray(grp_slice(s)).astype(d.dtype))
-
-    out = {"prefix": [jax.tree.map(pre, d, s)
-                      for d, s in zip(dst["prefix"], src["prefix"])],
-           "groups": None}
-    if dst.get("groups") is not None:
-        out["groups"] = jax.tree.map(grp, dst["groups"], src["groups"])
-    return out
-
-
-def _slot_insert(dst, src, slot: int):
-    """Insert a batch-1 cache tree `src` into slot `slot` of `dst`."""
-    return _slot_set(dst, src, slot, lambda s: s[0], lambda s: s[:, 0])
-
-
-def _slot_restore(dst, src, slot: int):
-    """Insert a batch-free extracted tree (from _slot_extract) back."""
-    return _slot_set(dst, src, slot, lambda s: s, lambda s: s)
-
-
-def _slot_extract(tree, slot: int):
-    """Pull slot `slot` out of every leaf (host numpy copies)."""
-    return {
-        "prefix": [jax.tree.map(lambda c: np.asarray(c[slot]), t)
-                   for t in tree["prefix"]],
-        "groups": (jax.tree.map(lambda c: np.asarray(c[:, slot]),
-                                tree["groups"])
-                   if tree.get("groups") is not None else None),
-    }

@@ -1,0 +1,205 @@
+"""Built-in KVBackend implementations (Resource Subsystem, DESIGN.md §2§3).
+
+`DenseKV` keeps the per-slot `[slots, cache_len, KV, hd]` slabs; `PagedKV`
+is the shared `[n_pages, page_size, KV, hd]` pool behind per-slot page
+tables (the MTT made into the actual memory layout). Both sit behind the
+same `KVBackend` protocol, so the engine drives dense and paged decode
+through one code path and `tests/test_paged_kv.py` pins them
+logit-identical. The PagePool (admission accounting + alloc-on-append)
+is owned here; `sync` re-exports MTT rows into the decode state only
+when some park/admit/growth dirtied them.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.resource import PagePool
+from repro.models import lm
+from repro.models import transformer as tf
+from repro.serve.api import (EngineConfig, ParkMeta, Request,
+                             register_kv_backend)
+
+
+class _PooledKV:
+    """Shared plumbing: the PagePool (MTT accounting) + growth helpers."""
+
+    def __init__(self, cfg, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.pool = PagePool(ecfg.n_pages, ecfg.page_size)
+
+    def append(self, req_id: int, n_tokens: int) -> bool:
+        """Alloc-on-append: grow req's page claim to cover n_tokens."""
+        return self.pool.ensure_capacity(req_id, n_tokens)
+
+    def held(self, req_id: int) -> int:
+        return len(self.pool.pages_of(req_id))
+
+    def release(self, req_id: int) -> None:
+        self.pool.release(req_id)
+
+
+@register_kv_backend("dense")
+class DenseKV(_PooledKV):
+    """Per-slot contiguous slabs; worst-case reservation at admission.
+
+    No indirection tables -> `sync` is a no-op and capacity can never run
+    out mid-decode (`needs_growth = False`): the footprint reserved up
+    front covers every token the request may write.
+    """
+
+    needs_growth = False
+
+    def init_state(self) -> dict:
+        return lm.init_serve_state(self.cfg, self.ecfg.slots,
+                                   self.ecfg.cache_len, filled=False)
+
+    def footprint(self, req: Request) -> int:
+        return min(len(req.prompt) + req.max_new_tokens,
+                   self.ecfg.cache_len)
+
+    def prefill_into_slot(self, state: dict, slot: int, req_id: int,
+                          caches, length: int) -> dict:
+        state["caches"] = _slot_insert(state["caches"], caches, slot)
+        return state
+
+    def park(self, state: dict, slot: int,
+             req_id: int) -> Tuple[Any, ParkMeta]:
+        caches = _slot_extract(state["caches"], slot)
+        meta = ParkMeta(int(state["lengths"][slot]),
+                        int(state["positions"][slot]), slot, 0)
+        self.pool.release(req_id)
+        return caches, meta
+
+    def unpark(self, state: dict, slot: int, req: Request, caches,
+               meta: ParkMeta) -> Tuple[bool, dict]:
+        need = meta.length + req.max_new_tokens - len(req.tokens_out)
+        if not self.pool.ensure_capacity(req.req_id, need):
+            return False, state
+        state["caches"] = _slot_restore(state["caches"], caches, slot)
+        return True, state
+
+    def mark_dirty(self) -> None:
+        pass
+
+    def sync(self, state: dict,
+             slot_req_ids: List[Optional[int]]) -> dict:
+        return state
+
+
+@register_kv_backend("paged")
+class PagedKV(_PooledKV):
+    """Shared page pool + per-slot MTT rows (DESIGN.md §3).
+
+    Admission charges the prompt footprint only; growth happens at page
+    boundaries (`needs_growth = True` -> the engine runs its
+    alloc-on-append pass each step). Park moves exactly the sequence's
+    pages to host arrays; unpark re-allocates (ids may differ — the
+    table is re-exported by `sync`).
+    """
+
+    needs_growth = True
+
+    def __init__(self, cfg, ecfg: EngineConfig):
+        if ecfg.cache_len % ecfg.page_size:
+            raise ValueError("cache_len must be a page_size multiple")
+        super().__init__(cfg, ecfg)
+        self.max_pages = ecfg.cache_len // ecfg.page_size
+        self._dirty = False
+
+    def init_state(self) -> dict:
+        return lm.init_paged_serve_state(
+            self.cfg, self.ecfg.slots, self.ecfg.n_pages,
+            self.ecfg.page_size, self.max_pages)
+
+    def footprint(self, req: Request) -> int:
+        return len(req.prompt) + 1
+
+    def prefill_into_slot(self, state: dict, slot: int, req_id: int,
+                          caches, length: int) -> dict:
+        pages = self.pool.pages_of(req_id)
+        chunks = tf.dense_to_pages(caches, len(pages), self.ecfg.page_size)
+        state["caches"] = tf.scatter_pages(state["caches"], chunks, pages)
+        self._dirty = True
+        return state
+
+    def park(self, state: dict, slot: int,
+             req_id: int) -> Tuple[Any, ParkMeta]:
+        page_ids = self.pool.pages_of(req_id)
+        caches = jax.tree.map(
+            np.asarray, tf.gather_pages(state["caches"], page_ids))
+        meta = ParkMeta(int(state["lengths"][slot]),
+                        int(state["positions"][slot]), slot, len(page_ids))
+        self.pool.release(req_id)
+        self._dirty = True
+        return caches, meta
+
+    def unpark(self, state: dict, slot: int, req: Request, caches,
+               meta: ParkMeta) -> Tuple[bool, dict]:
+        pages = self.pool.alloc(req.req_id, meta.n_pages)
+        if pages is None:
+            return False, state
+        state["caches"] = tf.scatter_pages(state["caches"], caches, pages)
+        self._dirty = True
+        return True, state
+
+    def mark_dirty(self) -> None:
+        self._dirty = True
+
+    def sync(self, state: dict,
+             slot_req_ids: List[Optional[int]]) -> dict:
+        if self._dirty:
+            state["page_table"] = jnp.asarray(
+                self.pool.table_matrix(slot_req_ids, self.max_pages))
+            self._dirty = False
+        return state
+
+
+# -- structure-aware slot insert / extract ---------------------------------
+#
+# Stack caches are {"prefix": [leaf trees with batch at axis 0],
+# "groups": leaf trees with a leading n_groups axis, batch at axis 1}.
+# Indexing every leaf at axis 0 (the seed's `_tree_insert`) silently hits
+# the *group* axis of scanned leaves; these helpers pick the batch axis by
+# subtree, which the paged-vs-dense equivalence test pins down.
+
+def _slot_set(dst, src, slot: int, pre_slice, grp_slice):
+    """Write per-slot data into every leaf, batch axis chosen by subtree."""
+
+    def pre(d, s):
+        return d.at[slot].set(jnp.asarray(pre_slice(s)).astype(d.dtype))
+
+    def grp(d, s):
+        return d.at[:, slot].set(jnp.asarray(grp_slice(s)).astype(d.dtype))
+
+    out = {"prefix": [jax.tree.map(pre, d, s)
+                      for d, s in zip(dst["prefix"], src["prefix"])],
+           "groups": None}
+    if dst.get("groups") is not None:
+        out["groups"] = jax.tree.map(grp, dst["groups"], src["groups"])
+    return out
+
+
+def _slot_insert(dst, src, slot: int):
+    """Insert a batch-1 cache tree `src` into slot `slot` of `dst`."""
+    return _slot_set(dst, src, slot, lambda s: s[0], lambda s: s[:, 0])
+
+
+def _slot_restore(dst, src, slot: int):
+    """Insert a batch-free extracted tree (from _slot_extract) back."""
+    return _slot_set(dst, src, slot, lambda s: s, lambda s: s)
+
+
+def _slot_extract(tree, slot: int):
+    """Pull slot `slot` out of every leaf (host numpy copies)."""
+    return {
+        "prefix": [jax.tree.map(lambda c: np.asarray(c[slot]), t)
+                   for t in tree["prefix"]],
+        "groups": (jax.tree.map(lambda c: np.asarray(c[:, slot]),
+                                tree["groups"])
+                   if tree.get("groups") is not None else None),
+    }

@@ -1,0 +1,50 @@
+"""Host-tier ParkingTransport (Transport Subsystem, DESIGN.md §2, §3.3).
+
+The VoQ overflow channel extracted from the engine: parked KV really
+moves to host numpy arrays, and the `BusModel` decides when the transfer
+is done — a restore is only offered once the simulated PCIe time has
+elapsed, so the engine's non-blocking property (everyone else keeps
+decoding while one connection's state is in flight) is exercised with
+real waiting, not a flag.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.resource import BusModel
+from repro.serve.api import ParkMeta
+
+
+class HostParkingTransport:
+    """In-process host-DRAM tier with bus-timed park/restore."""
+
+    def __init__(self, bus: Optional[BusModel] = None):
+        self.bus = bus or BusModel()
+        self._tier: Dict[int, Tuple[Any, ParkMeta]] = {}
+        self._ready_at: Dict[int, float] = {}
+        self.bytes_moved = 0.0
+
+    def begin(self, req_id: int, caches, meta: ParkMeta) -> None:
+        nbytes = sum(c.nbytes for c in jax.tree.leaves(caches))
+        self._tier[req_id] = (caches, meta)
+        self._ready_at[req_id] = (time.perf_counter()
+                                  + self.bus.transfer_time(nbytes))
+        self.bytes_moved += nbytes
+
+    def ready(self, now: Optional[float] = None) -> List[int]:
+        now = time.perf_counter() if now is None else now
+        return [rid for rid, t in list(self._ready_at.items()) if t <= now]
+
+    def peek(self, req_id: int) -> Tuple[Any, ParkMeta]:
+        return self._tier[req_id]
+
+    def complete(self, req_id: int) -> None:
+        del self._ready_at[req_id]
+        del self._tier[req_id]
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._tier)

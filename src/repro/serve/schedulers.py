@@ -1,0 +1,83 @@
+"""Built-in Scheduler implementations (Queue Subsystem, DESIGN.md §2).
+
+Each scheduler is a thin policy over a real N-queue `HostMultiQueue`:
+arrival = doorbell (`submit` pushes the request onto its QoS class
+queue), admission = WQE dispatch (`next` pops by policy). The paper's
+VoQ class separation lives here — one logical FIFO per class in the
+shared slot pool, so a full or slow class never blocks another's queue
+state. `requeue` always routes through `class_of`, so work bounced back
+by admission (no pages) or preempt-restart keeps its original class
+instead of collapsing onto queue 0.
+
+New policies register with `@register_scheduler("name")` and need no
+engine changes — see tests/test_scheduler_api.py for a third-party
+scheduler defined entirely outside src/.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.multiqueue import HostMultiQueue
+from repro.serve.api import Request, register_scheduler
+
+
+class _MultiQueueScheduler:
+    """Shared plumbing: an N-class HostMultiQueue + qos -> class mapping."""
+
+    def __init__(self, n_classes: int = 4, capacity: int = 1 << 12):
+        self.n_classes = max(1, int(n_classes))
+        self.mq = HostMultiQueue(self.n_classes, capacity=capacity)
+
+    def class_of(self, req: Request) -> int:
+        return min(max(int(getattr(req, "qos", 0)), 0), self.n_classes - 1)
+
+    def submit(self, req: Request) -> bool:
+        return self.mq.push(self.class_of(req), req)
+
+    # a requeued request is not a new arrival: same class, tail of queue
+    requeue = submit
+
+    @property
+    def pending(self) -> int:
+        return self.mq.total_len
+
+
+@register_scheduler("fcfs")
+class FcfsScheduler(_MultiQueueScheduler):
+    """Single arrival-order queue — the pre-API engine's behavior."""
+
+    def __init__(self, n_classes: int = 1, capacity: int = 1 << 12):
+        super().__init__(n_classes=1, capacity=capacity)
+
+    def next(self) -> Optional[Request]:
+        return self.mq.pop(0)
+
+
+@register_scheduler("priority")
+class PriorityScheduler(_MultiQueueScheduler):
+    """Strict priority: class 0 drains fully before class 1, etc.
+
+    The paper's QoS multiqueue — a high class's doorbell preempts every
+    lower class at the next admission, so under constrained slots
+    completion order follows class, not arrival.
+    """
+
+    def next(self) -> Optional[Request]:
+        item, _ = self.mq.pop_first()
+        return item
+
+
+@register_scheduler("round_robin")
+class RoundRobinScheduler(_MultiQueueScheduler):
+    """Fair drain: one admission per class in cyclic order (DRR with
+    unit quantum), so no class starves under sustained load."""
+
+    def __init__(self, n_classes: int = 4, capacity: int = 1 << 12):
+        super().__init__(n_classes=n_classes, capacity=capacity)
+        self._cursor = 0
+
+    def next(self) -> Optional[Request]:
+        item, q = self.mq.pop_round_robin(self._cursor)
+        if item is not None:
+            self._cursor = (q + 1) % self.n_classes
+        return item

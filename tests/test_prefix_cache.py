@@ -1,0 +1,64 @@
+"""PrefixCache: LRU eviction order, hit_rate accounting, zero capacity."""
+import numpy as np
+
+from repro.serve.prefix_cache import PrefixCache, prompt_key
+
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_lru_eviction_order():
+    pc = PrefixCache(capacity=2)
+    a, b, c = _toks(1, 2), _toks(3, 4), _toks(5, 6)
+    pc.put(a, "A")
+    pc.put(b, "B")
+    assert pc.get(a) == "A"        # refresh a -> b is now LRU
+    pc.put(c, "C")                 # evicts b, not a
+    assert pc.get(b) is None
+    assert pc.get(a) == "A"
+    assert pc.get(c) == "C"
+
+
+def test_put_refreshes_recency():
+    pc = PrefixCache(capacity=2)
+    a, b, c = _toks(1), _toks(2), _toks(3)
+    pc.put(a, 1)
+    pc.put(b, 2)
+    pc.put(a, 10)                  # re-put refreshes a AND overwrites
+    pc.put(c, 3)                   # evicts b (LRU), not a
+    assert pc.get(a) == 10
+    assert pc.get(b) is None
+    assert len(pc._d) == 2
+
+
+def test_hit_rate_accounting():
+    pc = PrefixCache(capacity=4)
+    a, b = _toks(1, 2, 3), _toks(9)
+    assert pc.hit_rate == 0.0      # no lookups yet: no div-by-zero
+    assert pc.get(a) is None       # miss
+    pc.put(a, "A")
+    assert pc.get(a) == "A"        # hit
+    assert pc.get(b) is None       # miss
+    assert pc.hits == 1 and pc.misses == 2
+    assert pc.hit_rate == 1 / 3
+    assert pc.hash_ops == 3        # every lookup hashes exactly once
+
+
+def test_capacity_zero_caches_nothing():
+    pc = PrefixCache(capacity=0)
+    a = _toks(1, 2)
+    pc.put(a, "A")
+    assert len(pc._d) == 0
+    assert pc.get(a) is None
+    assert pc.hit_rate == 0.0
+    pc.put(a, "A")                 # repeated puts stay a no-op, no error
+    assert pc.get(a) is None
+    assert pc.misses == 2
+
+
+def test_prompt_key_content_addressed():
+    a = np.arange(8, dtype=np.int32)
+    assert prompt_key(a) == prompt_key(a.copy())          # value, not id
+    assert prompt_key(a) != prompt_key(a[:7])
+    assert prompt_key(a) == prompt_key(np.asfortranarray(a))

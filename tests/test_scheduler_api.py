@@ -1,0 +1,231 @@
+"""Pluggable Scheduler API: policy equivalence, QoS reordering, registry.
+
+Pins the api_redesign contract (DESIGN.md §2): schedulers are pure
+admission-order policies — under a single QoS class every policy yields
+identical per-request outputs; under mixed classes with constrained
+slots, strict priority reorders *completion*, never content; and a
+third-party scheduler defined entirely outside src/ plugs in through the
+registry with zero engine changes.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.models import lm
+from repro.serve.api import (SCHEDULERS, EngineConfig, Request,
+                             default_page_budget, make_engine,
+                             make_scheduler, register_scheduler)
+from repro.serve.schedulers import (FcfsScheduler, PriorityScheduler,
+                                    RoundRobinScheduler)
+
+BUILTINS = ("fcfs", "priority", "round_robin")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, reqs, scheduler, slots=1, **kw):
+    eng = make_engine(cfg, params, EngineConfig(
+        slots=slots, cache_len=64, n_pages=64, page_size=8, eos_token=-1,
+        scheduler=scheduler, qos_classes=2, **kw))
+    for i, prompt, qos in reqs:
+        eng.submit(Request(i, prompt.copy(), max_new_tokens=4, qos=qos))
+    done = eng.run_until_done()
+    assert len(done) == len(reqs)
+    return done, eng
+
+
+def _trace(n, qos, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(i, rng.integers(1, 256, size=int(rng.integers(6, 14)))
+             .astype(np.int32), qos[i]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# equivalence under uniform class
+# ---------------------------------------------------------------------------
+
+def test_uniform_class_all_schedulers_identical(tiny):
+    """Single-class load: fcfs == priority == round_robin, both in
+    per-request outputs and in completion order."""
+    cfg, params = tiny
+    reqs = _trace(5, qos=[0] * 5)
+    results = {}
+    for sched in BUILTINS:
+        done, _ = _run(cfg, params, reqs, sched, slots=2)
+        results[sched] = ([r.req_id for r in done],
+                          {r.req_id: r.tokens_out for r in done})
+    assert results["priority"] == results["fcfs"]
+    assert results["round_robin"] == results["fcfs"]
+
+
+# ---------------------------------------------------------------------------
+# QoS reordering under mixed class, constrained slots
+# ---------------------------------------------------------------------------
+
+def test_priority_reorders_completion_mixed_class(tiny):
+    """Class-0 (high) requests submitted *after* class-1 ones must still
+    complete first under strict priority with one slot; outputs stay
+    byte-identical to FCFS."""
+    cfg, params = tiny
+    reqs = _trace(6, qos=[1, 1, 1, 0, 0, 0])
+    fcfs_done, _ = _run(cfg, params, reqs, "fcfs")
+    prio_done, _ = _run(cfg, params, reqs, "priority")
+    assert [r.req_id for r in fcfs_done] == [0, 1, 2, 3, 4, 5]
+    assert [r.req_id for r in prio_done] == [3, 4, 5, 0, 1, 2]
+    assert ({r.req_id: r.tokens_out for r in prio_done}
+            == {r.req_id: r.tokens_out for r in fcfs_done})
+
+
+def test_round_robin_interleaves_classes(tiny):
+    cfg, params = tiny
+    reqs = _trace(6, qos=[1, 1, 1, 0, 0, 0])
+    done, _ = _run(cfg, params, reqs, "round_robin")
+    assert [r.req_id for r in done] == [3, 0, 4, 1, 5, 2]
+
+
+# ---------------------------------------------------------------------------
+# requeue preserves the QoS class (single-queue ossification fix)
+# ---------------------------------------------------------------------------
+
+def test_requeue_preserves_qos_class():
+    sched = make_scheduler("priority", n_classes=3)
+    low = Request(0, np.arange(3, dtype=np.int32), qos=2)
+    sched.submit(low)
+    got = sched.next()
+    assert got is low
+    sched.requeue(got)                      # bounced by admission
+    assert sched.mq.qlen(2) == 1            # back on class 2, not class 0
+    mid = Request(1, np.arange(3, dtype=np.int32), qos=1)
+    sched.submit(mid)
+    assert sched.next() is mid              # class 1 outranks requeued 2
+    assert sched.next() is low
+
+
+def test_scheduler_class_clamping():
+    sched = make_scheduler("priority", n_classes=2)
+    assert sched.class_of(Request(0, np.arange(2), qos=-3)) == 0
+    assert sched.class_of(Request(1, np.arange(2), qos=99)) == 1
+    fcfs = make_scheduler("fcfs", n_classes=8)
+    assert fcfs.n_classes == 1              # fcfs collapses to one queue
+    assert fcfs.class_of(Request(2, np.arange(2), qos=5)) == 0
+
+
+# ---------------------------------------------------------------------------
+# registry: a third-party scheduler runs unmodified
+# ---------------------------------------------------------------------------
+
+def test_third_party_scheduler_via_registry(tiny):
+    cfg, params = tiny
+
+    @register_scheduler("lifo-test")
+    class LifoScheduler:                    # defined here, not in src/
+        n_classes = 1
+
+        def __init__(self, n_classes=1, capacity=1024):
+            self._stack = []
+
+        def class_of(self, req):
+            return 0
+
+        def submit(self, req):
+            self._stack.append(req)
+            return True
+
+        requeue = submit
+
+        def next(self):
+            return self._stack.pop() if self._stack else None
+
+        @property
+        def pending(self):
+            return len(self._stack)
+
+    try:
+        reqs = _trace(3, qos=[0, 0, 0])
+        done, eng = _run(cfg, params, reqs, "lifo-test")
+        assert isinstance(eng.sched, LifoScheduler)
+        assert [r.req_id for r in done] == [2, 1, 0]   # LIFO admission
+    finally:
+        del SCHEDULERS["lifo-test"]
+
+
+def test_full_queue_rejects_submit_loudly(tiny):
+    """A full scheduler queue must reject at submit, not drop silently."""
+    cfg, params = tiny
+    eng = make_engine(cfg, params, EngineConfig(
+        slots=1, cache_len=64, n_pages=64, page_size=8, eos_token=-1,
+        queue_capacity=2))
+    for i in range(2):
+        eng.submit(Request(i, np.arange(1, 5, dtype=np.int32),
+                           max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="queue full"):
+        eng.submit(Request(2, np.arange(1, 5, dtype=np.int32),
+                           max_new_tokens=2))
+    assert len(eng.run_until_done()) == 2
+
+
+def test_eviction_never_inverts_priority(tiny):
+    """Admitting a low-class request must not park a running high-class
+    sequence: the Resource tier may only evict same-or-lower priority."""
+    cfg, params = tiny
+    eng = make_engine(cfg, params, EngineConfig(
+        slots=2, cache_len=64, n_pages=4, page_size=8, eos_token=-1,
+        kv_layout="paged", scheduler="priority", qos_classes=2))
+    rng = np.random.default_rng(7)
+    hi = Request(0, rng.integers(1, 256, size=20).astype(np.int32),
+                 max_new_tokens=4, qos=0)
+    eng.submit(hi)
+    eng.step()                              # hi admitted: 3 of 4 pages
+    assert eng.active[0]
+    lo = Request(1, rng.integers(1, 256, size=10).astype(np.int32),
+                 max_new_tokens=4, qos=1)   # needs 2 pages > 1 free
+    eng.submit(lo)
+    done = eng.run_until_done()
+    assert eng.stats["parked"] == 0         # hi was never evicted for lo
+    assert [r.req_id for r in done] == [0, 1]
+
+
+def test_unknown_scheduler_rejected(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_engine(cfg, params, EngineConfig(scheduler="nope"))
+
+
+def test_unknown_kv_layout_rejected(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="unknown kv layout"):
+        make_engine(cfg, params, EngineConfig(kv_layout="sparse"))
+
+
+# ---------------------------------------------------------------------------
+# scheduler equivalence survives the paged backend + page pressure
+# ---------------------------------------------------------------------------
+
+def test_uniform_class_equivalence_paged_backend(tiny):
+    """The Scheduler x KVBackend axes are independent: a tight paged pool
+    (forcing growth/parking) still yields scheduler-identical outputs."""
+    cfg, params = tiny
+    reqs = _trace(4, qos=[0] * 4, seed=3)
+    results = {}
+    for sched in BUILTINS:
+        done, eng = _run(cfg, params, reqs, sched, slots=2,
+                         kv_layout="paged")
+        assert eng.pool.n_free == eng.pool.n_pages
+        results[sched] = {r.req_id: r.tokens_out for r in done}
+    assert results["priority"] == results["fcfs"]
+    assert results["round_robin"] == results["fcfs"]
+
+
+def test_default_page_budget_covers_dense_worst_case():
+    assert default_page_budget(4, 160, 16) == (4 + 1) * 10
+    assert default_page_budget(3, 100, 16) == 4 * 7   # ceil division
+    sched_types = {FcfsScheduler, PriorityScheduler, RoundRobinScheduler}
+    assert {SCHEDULERS[n] for n in BUILTINS} == sched_types

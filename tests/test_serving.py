@@ -76,6 +76,7 @@ def test_decode_matches_unparked_sequence(tiny):
     time.sleep(0.001)
     done = eng.run_until_done()
     assert eng.stats["unparked"] == 1
+    assert eng.transport.bytes_moved > 0    # KV really crossed the bus
     assert done[0].tokens_out == ref
 
 
