@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-sched bench quickstart
+.PHONY: test bench-smoke bench-sched bench-prefill bench quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -10,9 +10,13 @@ test:
 bench-smoke:
 	$(PY) benchmarks/kv_scaling.py --mode paged
 	$(PY) benchmarks/kv_scaling.py --mode hash
+	$(PY) benchmarks/run.py --smoke
 
 bench-sched:
 	$(PY) benchmarks/scheduler_qos.py
+
+bench-prefill:
+	$(PY) benchmarks/chunked_prefill.py --smoke
 
 bench:
 	$(PY) benchmarks/run.py

@@ -1,0 +1,134 @@
+"""Chunked prefill + prefix sharing — the streaming frame's payoff
+(DESIGN.md §3.4-§3.5).
+
+Two measurements on a real engine:
+
+1. *Decode-latency jitter*: short requests decode while one long prompt
+   is injected. Monolithic prefill processes the whole prompt inside one
+   engine step — every running decode waits behind it (head-of-line
+   blocking, the paper's Fig-6 strawman at the workload level). Chunked
+   prefill bounds the per-step prefill work to `prefill_chunk` tokens, so
+   the long prompt streams through the frame and the step-time tail
+   (p95/max vs median) collapses.
+
+2. *Resident capacity from sharing*: N requests with a common page-
+   aligned system prompt. With the block cache on (`paged` layout) the
+   shared pages are refcounted and held once; peak pool usage drops by
+   ~(N-1) copies of the prefix.
+
+  PYTHONPATH=src python benchmarks/chunked_prefill.py
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _engine(cfg, params, **kw):
+    from repro.serve.api import EngineConfig, make_engine
+    return make_engine(cfg, params, EngineConfig(eos_token=-1, **kw))
+
+
+def _jitter(cfg, params, chunk: int, long_len: int, steps: int = 24) -> dict:
+    """Per-step wall times while a long prompt lands mid-decode."""
+    from repro.serve.api import Request
+    eng = _engine(cfg, params, slots=4, cache_len=256, n_pages=160,
+                  page_size=16, prefill_chunk=chunk)
+    rng = np.random.default_rng(0)
+    for i in range(3):                          # three short decoders
+        eng.submit(Request(i, rng.integers(
+            1, cfg.vocab_size, size=12).astype(np.int32),
+            max_new_tokens=steps + 8))
+    for _ in range(3):
+        eng.step()                              # warm: all three decoding
+    eng.submit(Request(9, rng.integers(
+        1, cfg.vocab_size, size=long_len).astype(np.int32),
+        max_new_tokens=4))
+    times = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        eng.step()
+        times.append((time.perf_counter() - t0) * 1e3)
+    times = np.asarray(times)
+    return {"p50_ms": float(np.percentile(times, 50)),
+            "p95_ms": float(np.percentile(times, 95)),
+            "max_ms": float(times.max()),
+            "chunks": eng.stats["prefill_chunks"]}
+
+
+def _sharing(cfg, params, n_requests: int, prefix_len: int,
+             cache_on: bool) -> dict:
+    """Peak resident pages for N requests sharing a system prompt."""
+    from repro.serve.api import Request
+    eng = _engine(cfg, params, slots=n_requests, cache_len=128,
+                  n_pages=128, page_size=16, kv_layout="paged",
+                  prefill_chunk=16,
+                  prefix_cache_entries=64 if cache_on else 0)
+    rng = np.random.default_rng(1)
+    system = rng.integers(1, cfg.vocab_size,
+                          size=prefix_len).astype(np.int32)
+    # seed request writes the prefix once, then N sharers run together
+    eng.submit(Request(100, np.concatenate(
+        [system, rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)]),
+        max_new_tokens=2))
+    eng.run_until_done()
+    base_used = eng.pool.n_used                 # cache-pinned pages
+    for i in range(n_requests):
+        tail = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+        eng.submit(Request(i, np.concatenate([system, tail]),
+                           max_new_tokens=8))
+    peak = 0
+    while eng.sched.pending or eng.active.any():
+        eng.step()
+        peak = max(peak, eng.pool.n_used)
+    return {"peak_pages": peak, "baseline_pages": base_used,
+            "reused_tokens": eng.stats["prefix_tokens_reused"]}
+
+
+def run(smoke: bool = False) -> str:
+    import jax
+    from repro.configs.registry import SMOKE_CONFIGS
+
+    from repro.models import lm
+
+    cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    long_len = 96 if smoke else 192
+    steps = 16 if smoke else 24
+
+    rows = ["mode,metric,value"]
+    mono = _jitter(cfg, params, chunk=0, long_len=long_len, steps=steps)
+    chnk = _jitter(cfg, params, chunk=16, long_len=long_len, steps=steps)
+    for name, r in (("monolithic", mono), ("chunked", chnk)):
+        for k, v in r.items():
+            rows.append(f"jitter_{name},{k},{v:.3f}"
+                        if isinstance(v, float) else f"jitter_{name},{k},{v}")
+    rows.append(f"jitter,max_step_ratio_mono_over_chunked,"
+                f"{mono['max_ms'] / max(chnk['max_ms'], 1e-9):.2f}")
+
+    n_req = 4 if smoke else 6
+    shared = _sharing(cfg, params, n_req, prefix_len=64, cache_on=True)
+    private = _sharing(cfg, params, n_req, prefix_len=64, cache_on=False)
+    for name, r in (("shared", shared), ("private", private)):
+        for k, v in r.items():
+            rows.append(f"capacity_{name},{k},{v}")
+    saved = private["peak_pages"] - shared["peak_pages"]
+    rows.append(f"capacity,pages_saved_by_sharing,{saved}")
+    assert shared["reused_tokens"] > 0, "sharing run must hit the cache"
+    assert shared["peak_pages"] < private["peak_pages"], \
+        "refcounted prefix pages must shrink peak residency"
+    rows.append("# chunked p95/max should sit near p50; monolithic max "
+                "carries the whole long prefill in one step")
+    return "\n".join(rows)
+
+
+def main():
+    import sys
+    print(run(smoke="--smoke" in sys.argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -33,16 +33,20 @@ def run():
     step = jax.jit(make_train_step(cfg, NULL_POLICY,
                                    AdamWConfig(lr=1e-3, warmup_steps=2)))
     opt = adamw_init(params)
+    n_steps = 16
     losses = []
     t0 = time.perf_counter()
-    for _ in range(8):
+    for _ in range(n_steps):
         toks, _ = ds.next_batch()
         params, opt, m = step(params, opt, jnp.asarray(toks))
         losses.append(float(m["loss"]))
     dt = time.perf_counter() - t0
-    rows.append(f"train,loss_first,{losses[0]:.4f}")
-    rows.append(f"train,loss_last,{losses[-1]:.4f}")
-    rows.append(f"train,tokens_per_s,{8 * 4 * 128 / dt:.1f}")
+    # single-step losses on synthetic data are noisy (adjacent steps can
+    # regress); compare first-window vs last-window means instead
+    first4, last4 = float(np.mean(losses[:4])), float(np.mean(losses[-4:]))
+    rows.append(f"train,loss_first4_mean,{first4:.4f}")
+    rows.append(f"train,loss_last4_mean,{last4:.4f}")
+    rows.append(f"train,tokens_per_s,{n_steps * 4 * 128 / dt:.1f}")
 
     # --- serve ----------------------------------------------------------
     eng = ServingEngine(cfg, params, EngineConfig(
@@ -58,7 +62,7 @@ def run():
     rows.append(f"serve,decode_tokens_per_s,"
                 f"{eng.stats['decode_tokens'] / dt:.1f}")
     rows.append(f"serve,prefix_hit_rate,{eng.prefix.hit_rate:.3f}")
-    assert losses[-1] < losses[0], "training must reduce loss"
+    assert last4 < first4, "training must reduce loss"
     return "\n".join(rows)
 
 

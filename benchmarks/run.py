@@ -1,27 +1,42 @@
 """Benchmark driver: one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` style CSV blocks. See DESIGN.md §5 for
-the table/figure -> benchmark mapping.
+the table/figure -> benchmark mapping. ``--smoke`` runs the fast
+functional subset (e2e prototype + chunked prefill) used by CI.
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
 import traceback
 
+# allow `python benchmarks/run.py` from anywhere: the package parent
+# (repo root) must be importable
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 
 def main() -> None:
-    from benchmarks import (building_blocks, e2e, kv_scaling,
-                            module_footprint, reliability, resource_miss,
-                            scheduler_qos)
-    sections = [
-        ("table3_building_blocks", building_blocks.run),
-        ("table2_module_footprint", module_footprint.run),
-        ("fig12_resource_miss", resource_miss.run),
-        ("fig13_kv_scaling", kv_scaling.run),
-        ("sec4_qos_scheduler", scheduler_qos.run),
-        ("sec6.1_reliability_gbn_sr", reliability.run),
-        ("fig14_e2e_prototype", e2e.run),
-    ]
+    from benchmarks import (building_blocks, chunked_prefill, e2e,
+                            kv_scaling, module_footprint, reliability,
+                            resource_miss, scheduler_qos)
+    smoke = "--smoke" in sys.argv
+    if smoke:
+        sections = [
+            ("sec3_chunked_prefill", lambda: chunked_prefill.run(smoke=True)),
+            ("fig14_e2e_prototype", e2e.run),
+        ]
+    else:
+        sections = [
+            ("table3_building_blocks", building_blocks.run),
+            ("table2_module_footprint", module_footprint.run),
+            ("fig12_resource_miss", resource_miss.run),
+            ("fig13_kv_scaling", kv_scaling.run),
+            ("sec4_qos_scheduler", scheduler_qos.run),
+            ("sec3_chunked_prefill", chunked_prefill.run),
+            ("sec6.1_reliability_gbn_sr", reliability.run),
+            ("fig14_e2e_prototype", e2e.run),
+        ]
     failures = []
     for name, fn in sections:
         print(f"\n==== {name} ====")

@@ -23,16 +23,21 @@ def main():
                     help="fcfs | priority | round_robin")
     ap.add_argument("--kv-layout", choices=("dense", "paged"),
                     default="paged")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="page-aligned chunked-prefill width "
+                         "(0 = monolithic)")
     args = ap.parse_args()
 
     cfg = SMOKE_CONFIGS["qwen3-8b"]
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     # paged layout: KV lives in a shared page pool behind per-slot page
     # tables (DESIGN.md §3); the deliberately tight page budget exercises
-    # alloc-on-append growth and VoQ parking/eviction
+    # alloc-on-append growth, VoQ parking/eviction, and (with chunking)
+    # streamed prefill + refcounted prefix sharing
     eng = make_engine(cfg, params, EngineConfig(
         slots=4, cache_len=128, n_pages=28, page_size=8, eos_token=-1,
-        kv_layout=args.kv_layout, scheduler=args.scheduler, qos_classes=2))
+        kv_layout=args.kv_layout, scheduler=args.scheduler, qos_classes=2,
+        prefill_chunk=args.prefill_chunk))
 
     rng = np.random.default_rng(0)
     base_prompt = rng.integers(1, cfg.vocab_size, size=24).astype(np.int32)
@@ -54,7 +59,8 @@ def main():
           f"[{args.kv_layout} kv, {args.scheduler} scheduler]")
     print(f"decode tokens/s: {eng.stats['decode_tokens'] / dt:.1f}")
     print("engine stats:", eng.stats)
-    print(f"prefix-cache hit rate: {eng.prefix.hit_rate:.2f}")
+    print(f"prefix-cache hit rate: {eng.prefix.hit_rate:.2f}  "
+          f"(tokens reused: {eng.stats['prefix_tokens_reused']})")
     print("completion order (req_id:qos):",
           " ".join(f"{r.req_id}:{r.qos}" for r in done))
     same = [tuple(r.tokens_out) for r in done if r.req_id % 2 == 0]

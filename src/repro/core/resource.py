@@ -136,11 +136,19 @@ class PagePool:
     written* and pages are claimed exactly at page-boundary crossings, so
     a sequence only ever holds ``ceil(len/page_size)`` pages instead of a
     worst-case dense reservation.
+
+    Pages are *refcounted* (DESIGN.md §3.5): a page allocated by `alloc`
+    starts with one reference (its owner's table row); `share` appends the
+    same physical pages to another sequence's table, and `addref`/`decref`
+    let a non-sequence owner (the prefix block cache) pin pages without a
+    table. A page returns to the free list only when its last reference
+    drops, so N sequences with a common prefix hold the prefix pages once.
     """
     n_pages: int
     page_size: int
     free: List[int] = field(default_factory=list)
     tables: Dict[int, List[int]] = field(default_factory=dict)
+    refcnt: Dict[int, int] = field(default_factory=dict)
 
     def __post_init__(self):
         if not self.free:
@@ -161,8 +169,33 @@ class PagePool:
         if len(self.free) < n:
             return None
         pages = [self.free.pop() for _ in range(n)]
+        for p in pages:
+            self.refcnt[p] = 1
         self.tables.setdefault(seq_id, []).extend(pages)
         return pages
+
+    def share(self, seq_id: int, pages: List[int]) -> None:
+        """Append already-allocated pages to seq's table (one new ref
+        each) — the prefix-sharing fast path: no data moves, no alloc."""
+        self.addref(pages)
+        self.tables.setdefault(seq_id, []).extend(pages)
+
+    def addref(self, pages: List[int]) -> None:
+        for p in pages:
+            self.refcnt[p] = self.refcnt.get(p, 0) + 1
+
+    def decref(self, pages: List[int]) -> None:
+        """Drop one reference per page; free pages whose count hits 0."""
+        for p in reversed(list(pages)):
+            rc = self.refcnt.get(p, 0) - 1
+            if rc <= 0:
+                self.refcnt.pop(p, None)
+                self.free.append(p)
+            else:
+                self.refcnt[p] = rc
+
+    def refcount(self, page: int) -> int:
+        return self.refcnt.get(page, 0)
 
     def ensure_capacity(self, seq_id: int, n_tokens: int) -> bool:
         """Alloc-on-append: grow seq's table to cover n_tokens slots."""
@@ -173,8 +206,7 @@ class PagePool:
         return True
 
     def release(self, seq_id: int):
-        pages = self.tables.pop(seq_id, [])
-        self.free.extend(reversed(pages))
+        self.decref(self.tables.pop(seq_id, []))
 
     def table_array(self, seq_id: int, max_pages: int) -> np.ndarray:
         t = self.tables.get(seq_id, [])

@@ -38,6 +38,13 @@ def main():
                          "| any registered third-party name)")
     ap.add_argument("--qos-classes", type=int, default=2,
                     help="QoS classes; requests get class i %% N")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="stream prompts in page-aligned chunks of this "
+                         "many tokens, interleaved with decode steps "
+                         "(0 = monolithic prefill)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prefill tokens ingested per engine step "
+                         "(0 derives it from --prefill-chunk)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -48,7 +55,9 @@ def main():
         slots=args.slots, cache_len=args.cache_len,
         n_pages=n_pages, page_size=args.page_size,
         kv_layout=args.kv_layout, scheduler=args.scheduler,
-        qos_classes=args.qos_classes, eos_token=-1))
+        qos_classes=args.qos_classes, eos_token=-1,
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget=args.prefill_budget))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(i, rng.integers(

@@ -227,6 +227,38 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
     return out.reshape(B, H, v_cache.shape[-1]).astype(q.dtype)
 
 
+def chunk_prefix_attention(q, k_cache, v_cache, q_pos, *, policy=None,
+                           scale: Optional[float] = None):
+    """Prompt-chunk attention against a dense cache (chunked prefill).
+
+    q: [B,C,H,hd] — one prompt chunk whose token i sits at absolute
+    position q_pos[i]; k_cache/v_cache: [B,L,KV,hd] hold every position
+    written so far *including this chunk* (the caller scatters the
+    chunk's K/V before attending). Causal over absolute positions: chunk
+    token i attends to cache slots <= q_pos[i], so running the prompt in
+    chunks computes exactly the rows of full-prefill attention that
+    belong to this chunk. Padded tail rows (q_pos past the prompt) are
+    computed but never read by the caller.
+    """
+    B, C, H, hd = q.shape
+    L, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, C, KV, G, hd)
+    if policy is not None:
+        qg = policy.constrain(qg, "batch", None, "kv_heads", None, None)
+        k_cache = policy.constrain(k_cache, "batch", "kv_seq", "kv_heads", None)
+        v_cache = policy.constrain(v_cache, "batch", "kv_seq", "kv_heads", None)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    causal = jnp.arange(L)[None, :] <= q_pos[:, None]          # [C,L]
+    s = jnp.where(causal[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgcs,bskd->bckgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, v_cache.shape[-1]).astype(q.dtype)
+
+
 def paged_decode_attention(q, page_table, k_pages, v_pages, lengths, *,
                            policy=None, scale: Optional[float] = None):
     """Decode attention through a page table (Resource Subsystem path).

@@ -250,6 +250,37 @@ def prefill(params, tokens, cfg: ModelConfig, policy: Policy,
     return logits, state
 
 
+def prefill_chunk(params, tokens, caches, start, n_valid, cfg: ModelConfig,
+                  policy: Policy):
+    """Streamed prefill: extend dense caches by one prompt chunk.
+
+    tokens: [B,C] — the chunk at absolute positions start..start+C-1
+    (`start` and `n_valid` are dynamic scalars, so a fixed chunk width
+    compiles once and serves the whole prompt). `caches` is a dense
+    serving cache tree (leaves [B, cache_len, KV, hd]) holding positions
+    [0, start); tokens past `n_valid` are padding — their K/V lands
+    beyond the valid length (masked by `lengths` downstream, overwritten
+    by the first decode append) and their outputs are never read.
+    Returns (logits [B,V] at the last valid chunk token, extended caches).
+    Chaining chunks over a prompt is logit-identical to `prefill`.
+    """
+    if not tf.chunked_prefill_supported(cfg):
+        raise ValueError(
+            f"chunked prefill requires a pure-attention config "
+            f"(no MLA/SWA/mamba/rwkv); got {cfg.name}")
+    x = embed(params["embed"], tokens, policy)
+    ctx = {"mode": "prefill_chunk", "start": start}
+    x, caches, _ = tf.apply_stack(params["stack"], x, cfg, policy, ctx,
+                                  caches=caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    B = x.shape[0]
+    last = jnp.full((B,), n_valid - 1, jnp.int32)
+    x_last = jnp.take_along_axis(
+        x, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    logits = head_logits(x_last, _head_weight(params, cfg), policy)
+    return logits, caches
+
+
 def decode_step(params, tokens, state, cfg: ModelConfig, policy: Policy,
                 active=None):
     """One decode step. tokens: [B] int32. Returns (logits [B,V], state).

@@ -21,7 +21,8 @@ from repro.models import mla as mla_mod
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
-from repro.models.attention import (chunked_causal_attention, decode_attention,
+from repro.models.attention import (chunk_prefix_attention,
+                                    chunked_causal_attention, decode_attention,
                                     paged_decode_attention)
 from repro.models.layers import (apply_rope, dense_mlp, init_dense_mlp,
                                  mlp_specs, rms_norm, rope_angles)
@@ -156,6 +157,38 @@ def attn_forward(x, p, cfg: ModelConfig, policy, ctx,
     return out, cache
 
 
+def attn_prefill_chunk(x, p, cfg: ModelConfig, policy, ctx, cache):
+    """Streamed prefill: extend a dense cache by one prompt chunk.
+
+    x: [B,C,D] — chunk tokens at absolute positions start..start+C-1
+    (ctx["start"] is a dynamic scalar, so one compiled program serves
+    every chunk of a fixed width); cache {k,v: [B,L,KV,hd]} holds
+    positions [0, start). The chunk's K/V is written in place with a
+    dynamic slice, then attention runs causally over absolute positions
+    — bit-for-bit the same rows full prefill would compute, which the
+    chunked-vs-monolithic equivalence test pins to 1e-4.
+    """
+    B, C, _ = x.shape
+    start = ctx["start"]
+    q, k_new, v_new = _qkv(x, p, cfg)
+    pos = start + jnp.arange(C)
+    ang = rope_angles(pos, cfg.head_dim, cfg.rope_theta)       # [C, hd/2]
+    q = apply_rope(q, ang)
+    k_new = apply_rope(k_new, ang)
+    # scatter by absolute position, NOT a dynamic slice: a slice of fixed
+    # width C would *clamp* its start when a padded tail chunk straddles
+    # cache_len, silently shifting the write over valid rows. The scatter
+    # puts every token exactly at its position and drops out-of-range
+    # padding rows instead.
+    k_c = cache["k"].at[:, pos].set(k_new.astype(cache["k"].dtype),
+                                    mode="drop")
+    v_c = cache["v"].at[:, pos].set(v_new.astype(cache["v"].dtype),
+                                    mode="drop")
+    out = chunk_prefix_attention(q, k_c, v_c, pos, policy=policy)
+    out = out.reshape(B, C, -1) @ p["wo"]
+    return out, {"k": k_c, "v": v_c}
+
+
 def attn_decode_paged(x, p, cfg: ModelConfig, policy, ctx, cache):
     """Paged decode: KV lives in a shared page pool, not a per-slot slab.
 
@@ -287,6 +320,9 @@ def apply_block(p, x, kind: str, mlp_kind: str, cfg: ModelConfig, policy,
                 else:
                     a, new_cache = attn_decode(h, p["attn"], cfg, policy,
                                                ctx, cache)
+            elif mode == "prefill_chunk":
+                a, new_cache = attn_prefill_chunk(h, p["attn"], cfg, policy,
+                                                  ctx, cache)
             else:
                 a, new_cache = attn_forward(h, p["attn"], cfg, policy, ctx,
                                             want_cache=want_cache)
@@ -528,6 +564,38 @@ def dense_to_pages(dense_caches, n_pages: int, page_size: int):
         return dense[0].reshape(
             (L // page_size, page_size) + tail)[:n_pages]
     return jax.tree.map(one, dense_caches)
+
+
+def pages_to_dense(page_caches, cache_len: int, page_size: int):
+    """Inverse of ``dense_to_pages``: page-granular data (token order) back
+    to a batch-1 dense cache tree zero-padded to ``cache_len``.
+
+    page leaves [P, page, KV, hd] -> [1, cache_len, KV, hd] (grouped
+    leaves [G, P, page, KV, hd] -> [G, 1, cache_len, KV, hd]). Used by the
+    chunked-prefill path to stage a paged slot's prefix as the dense cache
+    `attn_prefill_chunk` extends.
+    """
+    def one(p):
+        if p.ndim == 5:                           # [G, P, page, KV, hd]
+            G, P = p.shape[:2]
+            tail = p.shape[3:]
+            d = p.reshape((G, P * page_size) + tail)
+            d = jnp.pad(d, ((0, 0), (0, cache_len - P * page_size))
+                        + ((0, 0),) * len(tail))
+            return d[:, None]
+        P = p.shape[0]                            # [P, page, KV, hd]
+        tail = p.shape[2:]
+        d = p.reshape((P * page_size,) + tail)
+        d = jnp.pad(d, ((0, cache_len - P * page_size),)
+                    + ((0, 0),) * len(tail))
+        return d[None]
+    return jax.tree.map(one, page_caches)
+
+
+def chunked_prefill_supported(cfg: ModelConfig) -> bool:
+    """Chunked prefill (and the block prefix cache built on it) needs
+    plain full-attention caches — same gate as the paged layout."""
+    return paged_stack_supported(cfg)
 
 
 def gather_pages(pool_caches, page_ids):

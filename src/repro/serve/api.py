@@ -49,6 +49,10 @@ class EngineConfig:
     page_size: int = 16
     n_pages: int = 256            # device page budget (admission control)
     prefix_cache_entries: int = 32
+    prefill_chunk: int = 0        # tokens per prefill chunk; 0 = monolithic
+    prefill_budget: int = 0       # prefill tokens per engine step, spent
+                                  # in whole chunks (min. one chunk/step);
+                                  # 0 derives it from prefill_chunk
     eos_token: int = 0
     host_offload: bool = True     # VoQ overflow tier
     kv_layout: str = "dense"      # KVBackend name: "dense" | "paged"
@@ -108,6 +112,19 @@ class KVBackend(Protocol):
     def held(self, req_id: int) -> int: ...
     def prefill_into_slot(self, state: dict, slot: int, req_id: int,
                           caches, length: int) -> dict: ...
+    # chunked prefill: stage a slot's KV as a batch-1 dense tree, extend
+    # it one chunk at a time, write the chunk's pages/rows back
+    def slot_caches(self, state: dict, slot: int, req_id: int) -> Any: ...
+    def store_chunk(self, state: dict, slot: int, req_id: int, caches,
+                    start: int, n_tokens: int) -> dict: ...
+    # longest-prefix block sharing: install cached payloads into a slot,
+    # export a prefilled slot's blocks, pin/unpin cache-held payloads
+    def share_prefix(self, state: dict, slot: int, req_id: int,
+                     payloads: List[Any], n_tokens: int) -> dict: ...
+    def block_payload(self, state: dict, slot: int, req_id: int,
+                      block: int) -> Any: ...
+    def cache_retain(self, payload: Any) -> None: ...
+    def cache_release(self, payload: Any) -> None: ...
     def park(self, state: dict, slot: int,
              req_id: int) -> Tuple[Any, ParkMeta]: ...
     def unpark(self, state: dict, slot: int, req: Request, caches,

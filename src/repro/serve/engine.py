@@ -14,11 +14,17 @@ behind protocols and are selected by name through `EngineConfig`:
                    bus-timed (serve/parking.py)
 
 The engine loop itself is layout- and policy-free: admit from the
-scheduler, restore due unparks, run the backend's alloc-on-append pass,
-sync indirection tables, decode one step with the active mask freezing
-parked slots. The engine is exact (not a simulation): parked slots'
-caches are bit-frozen, evicted KV really moves to host numpy arrays and
-back.
+scheduler, restore due unparks, stream one chunk of each PREFILLING
+slot's prompt under the per-step token budget (DESIGN.md §3.4), run the
+backend's alloc-on-append pass, sync indirection tables, decode one step
+with the active mask freezing parked slots. Prompt ingestion is the
+paper's packet-granular streaming: with `prefill_chunk > 0` a long
+prompt flows through the frame in page-aligned chunks interleaved with
+decode steps, so it never head-of-line-blocks running sequences. The
+engine is exact (not a simulation): parked slots' caches are bit-frozen,
+evicted KV really moves to host numpy arrays and back, and prompts
+sharing a page-aligned prefix share physical pages through the
+refcounted block cache (DESIGN.md §3.5).
 """
 from __future__ import annotations
 
@@ -31,6 +37,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.models import transformer as tf
 from repro.serve.api import (EngineConfig, KVBackend, ParkingTransport,
                              Request, Scheduler, make_kv_backend,
                              make_scheduler)
@@ -54,6 +61,11 @@ class ServingEngine:
         self.ecfg = ecfg
         self.policy = policy
         B, L = ecfg.slots, ecfg.cache_len
+        if ecfg.prefill_chunk and ecfg.prefill_chunk % ecfg.page_size:
+            raise ValueError(
+                f"prefill_chunk {ecfg.prefill_chunk} must be a page_size "
+                f"({ecfg.page_size}) multiple so chunk boundaries stay "
+                f"page-aligned")
         self.kv = kv_backend or make_kv_backend(ecfg.kv_layout, cfg, ecfg)
         self.state = self.kv.init_state()
         self.sched = scheduler or make_scheduler(
@@ -61,25 +73,44 @@ class ServingEngine:
             capacity=ecfg.queue_capacity)
         self.transport = transport or HostParkingTransport(ecfg.bus)
         self.active = np.zeros(B, bool)          # slot has a sequence
-        self.running = np.zeros(B, bool)         # not parked
+        self.running = np.zeros(B, bool)         # decoding (not parked,
+        #                                          not mid-prefill)
+        self.prefilling = np.zeros(B, bool)      # streaming its prompt in
+        self.prefill_pos = np.zeros(B, np.int64)  # prompt tokens ingested
+        self._prefill_rr = 0                     # chunk-budget round-robin
         self.slot_req: List[Optional[Request]] = [None] * B
-        self.prefix = PrefixCache(ecfg.prefix_cache_entries)
+        # chunked prefill (and the block cache built on its tail-compute
+        # path) need plain-attention caches; other configs fall back to
+        # monolithic prefill with no prefix reuse
+        self._chunked_ok = tf.chunked_prefill_supported(cfg)
+        self.prefix = PrefixCache(
+            ecfg.prefix_cache_entries if self._chunked_ok else 0,
+            block=ecfg.page_size,
+            retain=self.kv.cache_retain, release=self.kv.cache_release)
         self._stalled: set = set()               # req_ids frozen in place
         self.completed: List[Request] = []
         self.stats = {"decode_steps": 0, "decode_tokens": 0, "prefills": 0,
-                      "prefill_tokens": 0, "parked": 0, "unparked": 0,
-                      "prefix_hits": 0, "page_allocs": 0, "pages_peak": 0,
+                      "prefill_tokens": 0, "prefill_chunks": 0,
+                      "parked": 0, "unparked": 0,
+                      "prefix_hits": 0, "prefix_tokens_reused": 0,
+                      "page_allocs": 0, "pages_peak": 0,
                       "preempt_restarts": 0}
 
         self._decode = jax.jit(
             lambda p, t, s, a: lm.decode_step(p, t, s, cfg, policy, active=a))
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, t, cfg, policy, cache_len=L))
+        self._prefill_chunk = jax.jit(
+            lambda p, t, c, s, nv: lm.prefill_chunk(p, t, c, s, nv, cfg,
+                                                    policy))
 
     @property
     def pool(self):
         """The KVBackend's PagePool (MTT accounting), for introspection."""
         return self.kv.pool
+
+    def _streaming(self) -> bool:
+        return bool(self.ecfg.prefill_chunk) and self._chunked_ok
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -108,6 +139,19 @@ class ServingEngine:
         idle = np.nonzero(~self.active)[0]
         return int(idle[0]) if len(idle) else None
 
+    def _release_slot(self, slot: int):
+        self.active[slot] = False
+        self.running[slot] = False
+        self.prefilling[slot] = False
+        self.prefill_pos[slot] = 0
+        self.slot_req[slot] = None
+
+    def _complete(self, slot: int, req: Request):
+        req.finished_at = time.perf_counter()
+        self.completed.append(req)
+        self.kv.release(req.req_id)
+        self._release_slot(slot)
+
     def _admit(self) -> int:
         admitted = 0
         while True:
@@ -117,45 +161,179 @@ class ServingEngine:
             req: Optional[Request] = self.sched.next()
             if req is None:
                 break
-            n_tok = self.kv.footprint(req)
-            if not self.kv.append(req.req_id, n_tok):
-                # no pages: try VoQ eviction of a same-or-lower-priority
-                # victim first (never park a higher class for this one)
-                if not self._evict_someone(exclude=req.req_id,
-                                           for_class=self.sched.class_of(req)):
-                    self._requeue(req)            # requeue; others proceed
-                    break
-                if not self.kv.append(req.req_id, n_tok):
-                    self._requeue(req)
-                    break
-            self._prefill_into(slot, req)
+            prompt = np.asarray(req.prompt, np.int32)
+            matched, payloads = self.prefix.match(prompt)
+            streaming = self._streaming()
+            if self.kv.needs_growth:
+                # charge only what this step will write: the shared
+                # prefix joins by reference, the first chunk (or the
+                # whole tail when not streaming) is new pages
+                first = len(prompt) - matched
+                if streaming:
+                    first = min(self.ecfg.prefill_chunk, first)
+                n_tok = matched + first
+                if matched + first == len(prompt):
+                    n_tok += 1                   # first decode token
+            else:
+                n_tok = self.kv.footprint(req)
+            if matched:
+                self.state = self.kv.share_prefix(
+                    self.state, slot, req.req_id, payloads, matched)
+            if not self._append_or_free(req.req_id, n_tok,
+                                        self.sched.class_of(req)):
+                self.kv.release(req.req_id)      # drop shared-prefix refs
+                self.prefix.unrecord(matched)    # retry will re-match
+                self._requeue(req)               # requeue; others proceed
+                break
+            self.active[slot] = True
+            self.running[slot] = False
+            self.prefilling[slot] = True
+            self.prefill_pos[slot] = matched
+            self.slot_req[slot] = req
+            if matched:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_tokens_reused"] += matched
+            self.stats["prefills"] += 1
+            self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                           self.pool.n_used)
+            if not streaming:
+                if matched:
+                    # cached prefix installed: compute only the tail,
+                    # in one chunk
+                    self._process_chunk(slot, len(prompt) - matched)
+                else:
+                    self._prefill_full(slot, req)
             admitted += 1
         return admitted
 
-    def _prefill_into(self, slot: int, req: Request):
+    def _prefill_full(self, slot: int, req: Request):
+        """Monolithic prefill (chunking disabled / unsupported config)."""
         prompt = np.asarray(req.prompt, np.int32)
-        cached = self.prefix.get(prompt)
-        if cached is not None:
-            caches, length, first_tok = cached
-            self.stats["prefix_hits"] += 1
-        else:
-            logits, st = self._prefill(self.params, jnp.asarray(prompt[None]))
-            caches = st["caches"]
-            length = len(prompt)
-            first_tok = int(jnp.argmax(logits[0]))
-            self.prefix.put(prompt, (caches, length, first_tok))
-            self.stats["prefills"] += 1
-            self.stats["prefill_tokens"] += length
-        req.tokens_out.append(first_tok)
+        logits, st = self._prefill(self.params, jnp.asarray(prompt[None]))
         self.state = self.kv.prefill_into_slot(
-            self.state, slot, req.req_id, caches, length)
-        self.state["lengths"] = self.state["lengths"].at[slot].set(length)
-        self.state["positions"] = self.state["positions"].at[slot].set(length)
-        self.active[slot] = True
-        self.running[slot] = True
-        self.slot_req[slot] = req
+            self.state, slot, req.req_id, st["caches"], len(prompt))
+        self.stats["prefill_tokens"] += len(prompt)
+        self._finish_prefill(slot, req, int(jnp.argmax(logits[0])))
+
+    # -- chunked prefill (DESIGN.md §3.4) ---------------------------------
+    def _prefill_step(self):
+        """Stream page-aligned chunks of the PREFILLING slots' prompts,
+        bounded by the per-step token budget — long prompts interleave
+        with decode instead of head-of-line-blocking it. The budget is
+        spent in whole chunks (chunk width is the compiled shape), with a
+        floor of one chunk per step so prefill always progresses."""
+        if not self._streaming():
+            return
+        chunk = self.ecfg.prefill_chunk
+        budget = self.ecfg.prefill_budget or chunk
+        quota = max(1, budget // chunk)          # whole chunks this step
+        n = self.ecfg.slots
+        for k in range(n):                       # rotate so concurrent
+            i = (self._prefill_rr + k) % n       # prefills share the
+            if quota <= 0:                       # budget round-robin
+                break
+            if not (self.active[i] and self.prefilling[i]):
+                continue
+            if self._process_chunk(i, chunk):
+                quota -= 1
+                self._prefill_rr = (i + 1) % n
+
+    def _process_chunk(self, slot: int, width: int) -> int:
+        """Ingest up to `width` prompt tokens for one PREFILLING slot.
+        Returns the number of tokens processed (0 if out of pages)."""
+        req = self.slot_req[slot]
+        pos = int(self.prefill_pos[slot])
+        total = len(req.prompt)
+        n_valid = min(width, total - pos)
+        last = pos + n_valid == total
+        need = pos + n_valid + (1 if last else 0)
+        if self.kv.needs_growth and not self._append_or_free(
+                req.req_id, need, self.sched.class_of(req)):
+            # no pages for this chunk: wait in place (decodes continue).
+            # If nothing is decoding and someone else is waiting on pages
+            # too (a lower prefilling slot or a stalled decode), back off
+            # (preempt-restart) so the other side can make progress
+            # instead of both waiting on each other's pages forever.
+            if (not self.running.any()
+                    and (self._stalled
+                         or any(self.prefilling[j] and self.active[j]
+                                for j in range(slot)))):
+                self._preempt_restart(slot)
+            return 0
+        chunk = np.zeros(width, np.int32)
+        chunk[:n_valid] = np.asarray(req.prompt[pos:pos + n_valid], np.int32)
+        caches = self.kv.slot_caches(self.state, slot, req.req_id)
+        logits, caches = self._prefill_chunk(
+            self.params, jnp.asarray(chunk[None]), caches,
+            jnp.int32(pos), jnp.int32(n_valid))
+        self.state = self.kv.store_chunk(
+            self.state, slot, req.req_id, caches, pos, n_valid)
+        self.prefill_pos[slot] = pos + n_valid
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_tokens"] += n_valid
         self.stats["pages_peak"] = max(self.stats["pages_peak"],
                                        self.pool.n_used)
+        if last:
+            self._finish_prefill(slot, req, int(jnp.argmax(logits[0])))
+        return n_valid
+
+    def _finish_prefill(self, slot: int, req: Request, first_tok: int):
+        total = len(req.prompt)
+        self.state["lengths"] = self.state["lengths"].at[slot].set(total)
+        self.state["positions"] = self.state["positions"].at[slot].set(total)
+        self.prefilling[slot] = False
+        self.prefill_pos[slot] = total
+        self._donate_prefix(slot, req)
+        req.tokens_out.append(first_tok)
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self.pool.n_used)
+        # the prefill token can already satisfy the contract: never run
+        # (or append) a decode token past max_new_tokens or EOS
+        if (len(req.tokens_out) >= req.max_new_tokens
+                or first_tok == self.ecfg.eos_token):
+            self._complete(slot, req)
+        else:
+            self.running[slot] = True
+
+    def _donate_prefix(self, slot: int, req: Request):
+        """Offer the prompt's full page-aligned blocks to the block cache
+        (paged: pages pinned by refcount; dense: per-block KV slices)."""
+        n_blocks = len(req.prompt) // self.ecfg.page_size
+        if n_blocks <= 0 or self.prefix.capacity <= 0:
+            return
+        prompt = np.asarray(req.prompt, np.int32)
+        self.prefix.insert(
+            prompt, n_blocks,
+            lambda b: self.kv.block_payload(self.state, slot, req.req_id, b))
+
+    def _append_reclaim(self, req_id: int, n_tok: int) -> bool:
+        """`kv.append`, dropping LRU cached blocks under page pressure —
+        cache-pinned pages are the cheapest to free (no live slot
+        recomputes, a future request merely re-prefills its prefix)."""
+        if self.kv.append(req_id, n_tok):
+            return True
+        if self.kv.needs_growth:
+            # evict until the append fits or the cache is empty: an
+            # eviction that frees nothing (blocks still shared by live
+            # sequences) may still be followed by freeable chains later
+            # in LRU order, and a flushed cache is cheaper than parking
+            # a live decode or bouncing an admission
+            while self.prefix.evict_one():
+                if self.kv.append(req_id, n_tok):
+                    return True
+        return False
+
+    def _append_or_free(self, req_id: int, n_tok: int,
+                        for_class: Optional[int]) -> bool:
+        """`_append_reclaim` plus the second pressure valve: VoQ eviction
+        of a same-or-lower-priority victim."""
+        if self._append_reclaim(req_id, n_tok):
+            return True
+        if self._evict_someone(exclude=req_id, for_class=for_class):
+            # reclaim again: cached blocks pinning the victim's pages
+            # free for real only now that its table refs are gone
+            return self._append_reclaim(req_id, n_tok)
+        return False
 
     def _requeue(self, req: Request):
         """Return bounced work to its class queue; a lost request is an
@@ -184,8 +362,10 @@ class ServingEngine:
         if not cands:
             return False
         worst = max(self.sched.class_of(self.slot_req[i]) for i in cands)
-        victim = [i for i in cands
-                  if self.sched.class_of(self.slot_req[i]) == worst][-1]
+        victim = max(
+            (i for i in cands
+             if self.sched.class_of(self.slot_req[i]) == worst),
+            key=lambda i: self.slot_req[i].arrived_at)
         return self._park_slot(victim)
 
     def _park_slot(self, slot: int) -> bool:
@@ -209,6 +389,10 @@ class ServingEngine:
                 continue
             ok, self.state = self.kv.unpark(
                 self.state, meta.slot, req, caches, meta)
+            while (not ok and self.kv.needs_growth
+                   and self.prefix.evict_one()):
+                ok, self.state = self.kv.unpark(
+                    self.state, meta.slot, req, caches, meta)
             if not ok:
                 continue                     # no pages yet; retry later
             self.running[meta.slot] = True
@@ -232,12 +416,12 @@ class ServingEngine:
         positions = np.asarray(self.state["positions"])
         for i in range(self.ecfg.slots):
             req = self.slot_req[i]
-            if req is None or not self.active[i]:
-                continue
+            if req is None or not self.active[i] or self.prefilling[i]:
+                continue                     # chunks manage their own pages
             if not self.running[i]:
                 if req.req_id in self._stalled:
                     before = self.kv.held(req.req_id)
-                    if self.kv.append(req.req_id, int(positions[i]) + 1):
+                    if self._append_reclaim(req.req_id, int(positions[i]) + 1):
                         self._stalled.discard(req.req_id)
                         self.running[i] = True
                         self.stats["page_allocs"] += (
@@ -246,7 +430,7 @@ class ServingEngine:
                 continue
             pos = int(positions[i])
             before = self.kv.held(req.req_id)
-            if self.kv.append(req.req_id, pos + 1):
+            if self._append_reclaim(req.req_id, pos + 1):
                 grown = self.kv.held(req.req_id) - before
                 if grown:
                     self.stats["page_allocs"] += grown
@@ -254,8 +438,9 @@ class ServingEngine:
                 continue
             if (self._evict_someone(exclude=req.req_id,
                                     for_class=self.sched.class_of(req))
-                    and self.kv.append(req.req_id, pos + 1)):
-                self.stats["page_allocs"] += 1
+                    and self._append_reclaim(req.req_id, pos + 1)):
+                self.stats["page_allocs"] += (
+                    self.kv.held(req.req_id) - before)
                 changed = True
                 continue
             changed = True
@@ -282,9 +467,7 @@ class ServingEngine:
         self.kv.release(req.req_id)
         self._stalled.discard(req.req_id)
         req.tokens_out.clear()
-        self.active[slot] = False
-        self.running[slot] = False
-        self.slot_req[slot] = None
+        self._release_slot(slot)
         self._requeue(req)
         self.stats["preempt_restarts"] += 1
 
@@ -292,13 +475,14 @@ class ServingEngine:
     def step(self):
         self._admit()
         self._try_unpark()
+        self._prefill_step()
         if self.kv.needs_growth:
             self._grow()
         self.state = self.kv.sync(
             self.state,
             [r.req_id if r is not None else None for r in self.slot_req])
-        if not self.active.any():
-            return
+        if not (self.active & self.running).any():
+            return                           # only prefilling/parked slots
         tokens = np.zeros(self.ecfg.slots, np.int32)
         for i, req in enumerate(self.slot_req):
             if req is not None and req.tokens_out:
@@ -319,12 +503,7 @@ class ServingEngine:
                     or tok == self.ecfg.eos_token
                     or int(self.state["positions"][i]) >= self.ecfg.cache_len)
             if done:
-                req.finished_at = time.perf_counter()
-                self.completed.append(req)
-                self.kv.release(req.req_id)
-                self.active[i] = False
-                self.running[i] = False
-                self.slot_req[i] = None
+                self._complete(i, req)
 
     def run_until_done(self, max_steps: int = 10_000):
         for _ in range(max_steps):

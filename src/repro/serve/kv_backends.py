@@ -42,6 +42,14 @@ class _PooledKV:
     def release(self, req_id: int) -> None:
         self.pool.release(req_id)
 
+    # prefix-cache payload pinning: only layouts whose payloads live in
+    # the pool (paged) need real refcounts
+    def cache_retain(self, payload) -> None:
+        pass
+
+    def cache_release(self, payload) -> None:
+        pass
+
 
 @register_kv_backend("dense")
 class DenseKV(_PooledKV):
@@ -67,6 +75,41 @@ class DenseKV(_PooledKV):
         state["caches"] = _slot_insert(state["caches"], caches, slot)
         return state
 
+    def slot_caches(self, state: dict, slot: int, req_id: int):
+        return _slot_view(state["caches"], slot)
+
+    def store_chunk(self, state: dict, slot: int, req_id: int, caches,
+                    start: int, n_tokens: int) -> dict:
+        # write back only the rows the chunk produced (a full-slab copy
+        # per chunk would be O(cache_len) traffic for O(chunk) new data);
+        # this also discards pad-row scatter past n_tokens, keeping the
+        # slab zero beyond the valid length like monolithic prefill
+        src = {
+            "prefix": [jax.tree.map(
+                lambda c: c[:, start:start + n_tokens], t)
+                for t in caches["prefix"]],
+            "groups": (jax.tree.map(
+                lambda c: c[:, :, start:start + n_tokens], caches["groups"])
+                if caches.get("groups") is not None else None),
+        }
+        state["caches"] = _slot_write_range(
+            state["caches"], src, slot, start, n_tokens)
+        return state
+
+    def share_prefix(self, state: dict, slot: int, req_id: int,
+                     payloads, n_tokens: int) -> dict:
+        # dense has no indirection to share through: copy the cached
+        # per-block KV slices into the slot's slab
+        state["caches"] = _slot_write_range(
+            state["caches"], _cat_blocks(payloads), slot, 0, n_tokens)
+        return state
+
+    def block_payload(self, state: dict, slot: int, req_id: int,
+                      block: int) -> Any:
+        ps = self.ecfg.page_size
+        return _slot_range_view(state["caches"], slot,
+                                block * ps, (block + 1) * ps)
+
     def park(self, state: dict, slot: int,
              req_id: int) -> Tuple[Any, ParkMeta]:
         caches = _slot_extract(state["caches"], slot)
@@ -77,7 +120,11 @@ class DenseKV(_PooledKV):
 
     def unpark(self, state: dict, slot: int, req: Request, caches,
                meta: ParkMeta) -> Tuple[bool, dict]:
-        need = meta.length + req.max_new_tokens - len(req.tokens_out)
+        # clamp to cache_len exactly like `footprint` does: a request
+        # admitted with a clamped footprint must not demand more capacity
+        # at unpark than submit validated, or it re-parks forever
+        need = min(meta.length + req.max_new_tokens - len(req.tokens_out),
+                   self.ecfg.cache_len)
         if not self.pool.ensure_capacity(req.req_id, need):
             return False, state
         state["caches"] = _slot_restore(state["caches"], caches, slot)
@@ -126,6 +173,57 @@ class PagedKV(_PooledKV):
         state["caches"] = tf.scatter_pages(state["caches"], chunks, pages)
         self._dirty = True
         return state
+
+    def slot_caches(self, state: dict, slot: int, req_id: int):
+        # stage the slot's pages (token order, shared prefix included) as
+        # the dense batch-1 tree the chunked-prefill step extends
+        pages = self.pool.pages_of(req_id)
+        gathered = tf.gather_pages(state["caches"], pages)
+        return tf.pages_to_dense(gathered, self.ecfg.cache_len,
+                                 self.ecfg.page_size)
+
+    def store_chunk(self, state: dict, slot: int, req_id: int, caches,
+                    start: int, n_tokens: int) -> dict:
+        """Scatter exactly the pages the chunk touched back into the pool.
+
+        start is page-aligned and >= the shared-prefix extent, so a chunk
+        write can never land in a page another sequence (or the prefix
+        cache) also references.
+        """
+        ps = self.ecfg.page_size
+        p0, p1 = start // ps, -(-(start + n_tokens) // ps)
+        pages = self.pool.pages_of(req_id)[p0:p1]
+
+        def cut(leaf):
+            if leaf.ndim == 5:                    # [G, 1, L, KV, hd]
+                seg = leaf[:, 0, p0 * ps:p1 * ps]
+                return seg.reshape((leaf.shape[0], len(pages), ps)
+                                   + leaf.shape[3:])
+            seg = leaf[0, p0 * ps:p1 * ps]        # [1, L, KV, hd]
+            return seg.reshape((len(pages), ps) + leaf.shape[2:])
+
+        data = jax.tree.map(cut, caches)
+        state["caches"] = tf.scatter_pages(state["caches"], data, pages)
+        self._dirty = True
+        return state
+
+    def share_prefix(self, state: dict, slot: int, req_id: int,
+                     payloads, n_tokens: int) -> dict:
+        # zero-copy: the cached pages join this sequence's table (one new
+        # ref each); the pool data is already the prefix KV
+        self.pool.share(req_id, list(payloads))
+        self._dirty = True
+        return state
+
+    def block_payload(self, state: dict, slot: int, req_id: int,
+                      block: int) -> Any:
+        return self.pool.pages_of(req_id)[block]
+
+    def cache_retain(self, payload) -> None:
+        self.pool.addref([payload])
+
+    def cache_release(self, payload) -> None:
+        self.pool.decref([payload])
 
     def park(self, state: dict, slot: int,
              req_id: int) -> Tuple[Any, ParkMeta]:
@@ -203,3 +301,61 @@ def _slot_extract(tree, slot: int):
                                 tree["groups"])
                    if tree.get("groups") is not None else None),
     }
+
+
+def _slot_view(tree, slot: int):
+    """Batch-1 device view of one slot (keeps the batch axis, no host
+    round-trip) — the staging tree chunked prefill extends in place."""
+    return {
+        "prefix": [jax.tree.map(lambda c: c[slot:slot + 1], t)
+                   for t in tree["prefix"]],
+        "groups": (jax.tree.map(lambda c: c[:, slot:slot + 1],
+                                tree["groups"])
+                   if tree.get("groups") is not None else None),
+    }
+
+
+def _slot_range_view(tree, slot: int, t0: int, t1: int):
+    """Batch-1 view of one slot restricted to token positions [t0, t1)
+    (the per-block payload the dense prefix cache stores)."""
+    return {
+        "prefix": [jax.tree.map(lambda c: c[slot:slot + 1, t0:t1], t)
+                   for t in tree["prefix"]],
+        "groups": (jax.tree.map(lambda c: c[:, slot:slot + 1, t0:t1],
+                                tree["groups"])
+                   if tree.get("groups") is not None else None),
+    }
+
+
+def _cat_blocks(blocks):
+    """Concatenate per-block payload trees along the token axis."""
+    if len(blocks) == 1:
+        return blocks[0]
+    return {
+        "prefix": [jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                                *[b["prefix"][i] for b in blocks])
+                   for i in range(len(blocks[0]["prefix"]))],
+        "groups": (jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=2),
+                                *[b["groups"] for b in blocks])
+                   if blocks[0].get("groups") is not None else None),
+    }
+
+
+def _slot_write_range(dst, src, slot: int, t0: int, length: int):
+    """Write a batch-1 tree `src` (token extent `length`) into slot
+    `slot` of `dst` at token positions [t0, t0+length)."""
+
+    def pre(d, s):
+        return d.at[slot, t0:t0 + length].set(
+            jnp.asarray(s[0]).astype(d.dtype))
+
+    def grp(d, s):
+        return d.at[:, slot, t0:t0 + length].set(
+            jnp.asarray(s[:, 0]).astype(d.dtype))
+
+    out = {"prefix": [jax.tree.map(pre, d, s)
+                      for d, s in zip(dst["prefix"], src["prefix"])],
+           "groups": None}
+    if dst.get("groups") is not None:
+        out["groups"] = jax.tree.map(grp, dst["groups"], src["groups"])
+    return out

@@ -1,0 +1,404 @@
+"""Chunked prefill + page-aligned prefix sharing (DESIGN.md §3.4-§3.5),
+and the serving-loop contract regressions fixed alongside them:
+
+- chunked prefill is logit-identical to monolithic prefill (model level)
+  and output-identical through the engine in both KV layouts;
+- a prompt longer than `prefill_chunk` never head-of-line-blocks running
+  decodes;
+- the block cache returns longest page-aligned prefixes (full/partial/
+  miss) and shared pages are physically held once (refcounts);
+- `max_new_tokens` / EOS-at-prefill contract, the DenseKV unpark clamp,
+  `_grow` page accounting and the eviction tie-break.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.models import lm
+from repro.serve.engine import EngineConfig, Request, ServingEngine
+from repro.sharding.policy import NULL_POLICY
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(n, seed=0, vocab=256):
+    return np.random.default_rng(seed).integers(
+        1, vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# logit equivalence: chunked == monolithic
+# ---------------------------------------------------------------------------
+
+def test_prefill_chunk_matches_monolithic_logits(tiny):
+    """Chaining prefill_chunk over any chunking of the prompt (including
+    ragged, padded tails) reproduces monolithic prefill logits."""
+    cfg, params = tiny
+    L = 64
+    prompt = _prompt(37)
+    ref, _ = lm.prefill(params, jnp.asarray(prompt[None]), cfg,
+                        NULL_POLICY, cache_len=L)
+    fn = jax.jit(lambda p, t, c, s, nv: lm.prefill_chunk(
+        p, t, c, s, nv, cfg, NULL_POLICY))
+    for width in (8, 16, 10, 37, 64):
+        caches = lm.init_serve_state(cfg, 1, L, filled=False)["caches"]
+        pos = 0
+        while pos < len(prompt):
+            nv = min(width, len(prompt) - pos)
+            chunk = np.zeros(width, np.int32)
+            chunk[:nv] = prompt[pos:pos + nv]
+            logits, caches = fn(params, jnp.asarray(chunk[None]), caches,
+                                jnp.int32(pos), jnp.int32(nv))
+            pos += nv
+        np.testing.assert_allclose(np.asarray(logits[0]),
+                                   np.asarray(ref[0]), atol=1e-4)
+
+
+def test_padded_tail_chunk_straddling_cache_len(tiny):
+    """A padded tail chunk whose fixed width extends past cache_len must
+    scatter tokens at their true positions (dropping pad rows), not slide
+    the write window back over valid KV the way a clamped dynamic slice
+    would."""
+    cfg, params = tiny
+    L, width = 40, 16
+    prompt = _prompt(39, seed=20)               # last chunk: [32, 48) > L
+    ref, _ = lm.prefill(params, jnp.asarray(prompt[None]), cfg,
+                        NULL_POLICY, cache_len=L)
+    fn = jax.jit(lambda p, t, c, s, nv: lm.prefill_chunk(
+        p, t, c, s, nv, cfg, NULL_POLICY))
+    caches = lm.init_serve_state(cfg, 1, L, filled=False)["caches"]
+    pos = 0
+    while pos < len(prompt):
+        nv = min(width, len(prompt) - pos)
+        chunk = np.zeros(width, np.int32)
+        chunk[:nv] = prompt[pos:pos + nv]
+        logits, caches = fn(params, jnp.asarray(chunk[None]), caches,
+                            jnp.int32(pos), jnp.int32(nv))
+        pos += nv
+    np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(ref[0]),
+                               atol=1e-4)
+
+
+def test_engine_prompt_near_cache_len_chunked(tiny):
+    """Engine-level: prompts within one chunk of cache_len stream
+    correctly in both layouts (the tail chunk pads past the cache edge)."""
+    cfg, params = tiny
+    prompt = _prompt(93, seed=21)               # cache_len 96, chunk 16
+    outs = {}
+    for layout in ("dense", "paged"):
+        for chunk in (0, 16):
+            eng = ServingEngine(cfg, params, EngineConfig(
+                slots=2, cache_len=96, n_pages=32, page_size=8,
+                eos_token=-1, kv_layout=layout, prefill_chunk=chunk))
+            eng.submit(Request(0, prompt.copy(), max_new_tokens=3))
+            done = eng.run_until_done()
+            assert len(done) == 1
+            outs[(layout, chunk)] = done[0].tokens_out
+    base = outs[("dense", 0)]
+    for key, value in outs.items():
+        assert value == base, key
+
+
+def test_chunked_engine_matches_monolithic_engine(tiny):
+    """Whole-engine equivalence: chunked and monolithic prefill yield
+    identical greedy outputs in both KV layouts."""
+    cfg, params = tiny
+    reqs = [(i, _prompt(n, seed=i)) for i, n in enumerate([60, 17, 25, 5, 44])]
+    outs = {}
+    for layout in ("dense", "paged"):
+        for chunk in (0, 16):
+            eng = ServingEngine(cfg, params, EngineConfig(
+                slots=3, cache_len=96, n_pages=64, page_size=8,
+                eos_token=-1, kv_layout=layout, prefill_chunk=chunk))
+            for i, p in reqs:
+                eng.submit(Request(i, p.copy(), max_new_tokens=6))
+            done = eng.run_until_done()
+            assert len(done) == len(reqs)
+            outs[(layout, chunk)] = {r.req_id: r.tokens_out for r in done}
+            if chunk:
+                assert eng.stats["prefill_chunks"] > 0
+    base = outs[("dense", 0)]
+    for key, value in outs.items():
+        assert value == base, key
+
+
+def test_chunk_must_be_page_aligned(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="page_size"):
+        ServingEngine(cfg, params, EngineConfig(
+            slots=2, cache_len=64, page_size=8, prefill_chunk=12))
+
+
+# ---------------------------------------------------------------------------
+# no head-of-line blocking
+# ---------------------------------------------------------------------------
+
+def test_long_prompt_does_not_stall_decodes(tiny):
+    """With chunking on, a prompt spanning many chunks is ingested one
+    chunk per step while every running slot keeps gaining exactly one
+    decode token per step."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=128, n_pages=48, page_size=8, eos_token=-1,
+        prefill_chunk=8))
+    short = Request(0, _prompt(5, seed=1), max_new_tokens=40)
+    eng.submit(short)
+    eng.step()                      # short: prefill + first decode token
+    assert len(short.tokens_out) == 2
+    long = Request(1, _prompt(120, seed=2), max_new_tokens=4)
+    eng.submit(long)
+    for _ in range(15):             # 120 tokens / 8-token chunks
+        before = len(short.tokens_out)
+        eng.step()
+        assert len(short.tokens_out) == before + 1   # never stalled
+    assert len(long.tokens_out) >= 1                 # prefill finished
+    done = eng.run_until_done()
+    assert len(done) == 2
+    assert eng.stats["prefill_chunks"] == 16         # 1 (short) + 15 (long)
+
+
+def test_concurrent_prefills_share_the_budget(tiny):
+    """Two slots streaming prompts split the per-step chunk budget
+    round-robin — a lower slot index must not starve a higher one."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=96, n_pages=32, page_size=8, eos_token=-1,
+        prefill_chunk=8))
+    eng.submit(Request(0, _prompt(64, seed=30), max_new_tokens=2))
+    eng.submit(Request(1, _prompt(64, seed=31), max_new_tokens=2))
+    eng.step()                                   # both admitted
+    assert eng.prefilling.all()
+    for _ in range(4):
+        eng.step()
+    # one chunk per step, alternating: neither slot runs away
+    assert abs(int(eng.prefill_pos[0]) - int(eng.prefill_pos[1])) <= 8
+    assert int(eng.prefill_pos[0]) > 0 and int(eng.prefill_pos[1]) > 0
+    done = eng.run_until_done()
+    assert len(done) == 2
+
+
+# ---------------------------------------------------------------------------
+# longest-prefix block sharing
+# ---------------------------------------------------------------------------
+
+def test_prefix_block_cache_full_partial_miss(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=64, n_pages=48, page_size=8, eos_token=-1,
+        kv_layout="paged", prefill_chunk=8))
+    base = _prompt(32, seed=3)
+    eng.submit(Request(0, base.copy(), max_new_tokens=4))
+    done = eng.run_until_done()
+    assert eng.stats["prefix_tokens_reused"] == 0
+
+    # full hit (clamped to leave the tail block): 24 of 32 tokens reused
+    eng.submit(Request(1, base.copy(), max_new_tokens=4))
+    done = eng.run_until_done()
+    assert eng.stats["prefix_tokens_reused"] == 24
+    outs = {r.req_id: r.tokens_out for r in done}
+    assert outs[1] == outs[0]
+
+    # partial hit: shares the first 2 blocks only
+    partial = base.copy()
+    partial[20] = (partial[20] % 254) + 1
+    eng.submit(Request(2, partial, max_new_tokens=4))
+    eng.run_until_done()
+    assert eng.stats["prefix_tokens_reused"] == 24 + 16
+
+    # miss: first block differs
+    miss = base.copy()
+    miss[0] = (miss[0] % 254) + 1
+    eng.submit(Request(3, miss, max_new_tokens=4))
+    eng.run_until_done()
+    assert eng.stats["prefix_tokens_reused"] == 24 + 16
+    assert eng.stats["prefix_hits"] == 2
+
+
+def test_shared_prefix_pages_held_once(tiny):
+    """Two live requests sharing a page-aligned prefix reference the same
+    physical pages (pool n_used counts them once), and either one
+    finishing first does not corrupt the survivor's decode."""
+    cfg, params = tiny
+    shared = _prompt(32, seed=4)                  # 4 shared pages
+    tails = [_prompt(8, seed=5), _prompt(8, seed=6)]
+    prompts = [np.concatenate([shared, t]) for t in tails]
+
+    # reference outputs: no cache, each request alone
+    refs = []
+    for i, p in enumerate(prompts):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            slots=1, cache_len=64, n_pages=16, page_size=8, eos_token=-1,
+            kv_layout="paged", prefix_cache_entries=0))
+        eng.submit(Request(i, p.copy(), max_new_tokens=10 + 6 * i))
+        refs.append(eng.run_until_done()[0].tokens_out)
+
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=64, n_pages=32, page_size=8, eos_token=-1,
+        kv_layout="paged", prefill_chunk=8))
+    seed_req = Request(0, prompts[0].copy(), max_new_tokens=10)
+    eng.submit(seed_req)
+    done = eng.run_until_done()
+    assert done[0].tokens_out == refs[0]
+
+    # both sharers admitted together; r1 finishes well before r2
+    r1 = Request(1, prompts[0].copy(), max_new_tokens=10)
+    r2 = Request(2, prompts[1].copy(), max_new_tokens=16)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.step()
+    pages1 = set(eng.pool.pages_of(1))
+    pages2 = set(eng.pool.pages_of(2))
+    common = pages1 & pages2
+    assert len(common) == 4                       # the 32-token prefix
+    for p in common:                              # cache + two sharers
+        assert eng.pool.refcount(p) == 3
+    # held once: the union of both tables, plus the single cache-pinned
+    # block of the seed request's unique tail
+    assert eng.pool.n_used == len(pages1 | pages2) + 1
+    assert eng.pool.n_used < len(pages1) + len(pages2)
+    done = eng.run_until_done()
+    outs = {r.req_id: r.tokens_out for r in done}
+    assert outs[1] == refs[0]
+    assert outs[2] == refs[1]                     # survivor unharmed
+    eng.prefix.clear()
+    assert eng.pool.n_free == eng.pool.n_pages
+
+
+def test_shared_prefix_survives_sharer_park(tiny):
+    """Parking one sharer (KV moves to the host tier, its page refs drop)
+    must leave the other sharer's pages intact and both complete with
+    reference outputs."""
+    cfg, params = tiny
+    shared = _prompt(32, seed=7)
+    p1 = np.concatenate([shared, _prompt(8, seed=8)])
+    p2 = np.concatenate([shared, _prompt(8, seed=9)])
+
+    refs = {}
+    for i, p in ((1, p1), (2, p2)):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            slots=1, cache_len=64, n_pages=16, page_size=8, eos_token=-1,
+            kv_layout="paged", prefix_cache_entries=0))
+        eng.submit(Request(i, p.copy(), max_new_tokens=12))
+        refs[i] = eng.run_until_done()[0].tokens_out
+
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=64, n_pages=32, page_size=8, eos_token=-1,
+        kv_layout="paged", prefill_chunk=8))
+    eng.submit(Request(0, p1.copy(), max_new_tokens=4))   # seeds the cache
+    eng.run_until_done()
+    r1 = Request(1, p1.copy(), max_new_tokens=12)
+    r2 = Request(2, p2.copy(), max_new_tokens=12)
+    eng.submit(r1)
+    eng.submit(r2)
+    for _ in range(3):
+        eng.step()
+    slot1 = eng.slot_req.index(r1)
+    assert eng._park_slot(slot1)                  # evict sharer 1's KV
+    for _ in range(3):
+        eng.step()                                # sharer 2 keeps decoding
+    done = eng.run_until_done()
+    outs = {r.req_id: r.tokens_out for r in done}
+    assert outs[1] == refs[1]
+    assert outs[2] == refs[2]
+    eng.prefix.clear()
+    assert eng.pool.n_free == eng.pool.n_pages
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_max_new_tokens_one_emits_exactly_one(tiny, layout):
+    """max_new_tokens=1 must emit 1 token (the prefill argmax), not 2."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=64, n_pages=32, page_size=8, eos_token=-1,
+        kv_layout=layout))
+    eng.submit(Request(0, _prompt(11, seed=10), max_new_tokens=1))
+    done = eng.run_until_done(max_steps=50)
+    assert len(done) == 1
+    assert len(done[0].tokens_out) == 1
+
+
+def test_eos_at_prefill_terminates(tiny):
+    """A request whose *prefill* argmax is EOS must complete immediately
+    instead of decoding forever."""
+    cfg, params = tiny
+    prompt = _prompt(11, seed=11)
+    logits, _ = lm.prefill(params, jnp.asarray(prompt[None]), cfg,
+                           NULL_POLICY, cache_len=64)
+    eos = int(jnp.argmax(logits[0]))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=64, n_pages=32, page_size=8, eos_token=eos))
+    eng.submit(Request(0, prompt, max_new_tokens=8))
+    done = eng.run_until_done(max_steps=50)
+    assert len(done) == 1
+    assert done[0].tokens_out == [eos]
+
+
+def test_dense_unpark_need_clamped(tiny):
+    """DenseKV.unpark must clamp its capacity demand to cache_len the way
+    footprint does; otherwise a request admitted with a clamped footprint
+    (prompt + max_new > cache_len) can never re-acquire pages and the
+    engine livelocks on transport.in_flight."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=1, cache_len=64, n_pages=8, page_size=8, eos_token=-1))
+    eng.submit(Request(0, _prompt(32, seed=12), max_new_tokens=64))
+    eng.step()
+    assert eng._park_slot(0)                     # KV to the host tier
+    done = eng.run_until_done(max_steps=300)
+    assert eng.stats["unparked"] == 1
+    assert len(done) == 1                        # no livelock
+    # prefill token + one decode per remaining cache slot
+    assert len(done[0].tokens_out) == 64 - 32 + 1
+
+
+def test_evict_victim_is_most_recently_admitted(tiny):
+    """_evict_someone's same-class tie-break promises 'most recently
+    admitted' — it must key on arrived_at, not on slot index."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=64, n_pages=32, page_size=8, eos_token=-1))
+    eng.submit(Request(0, _prompt(9, seed=13), max_new_tokens=16))
+    eng.submit(Request(1, _prompt(9, seed=14), max_new_tokens=16))
+    eng.step()
+    assert eng.running.all()
+    # make the *lower* slot the most recent admission
+    eng.slot_req[0].arrived_at = eng.slot_req[1].arrived_at + 1.0
+    assert eng._evict_someone(exclude=-1)
+    assert not eng.running[0]                    # most recent was parked
+    assert eng.running[1]
+
+
+def test_grow_counts_actual_pages_on_eviction_retry(tiny):
+    """_grow's eviction-retry path must record the real held-page delta,
+    not a hardcoded single page."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=64, n_pages=5, page_size=8, eos_token=-1,
+        kv_layout="paged"))
+    eng.submit(Request(0, _prompt(15, seed=15), max_new_tokens=8))  # 2 pages
+    eng.submit(Request(1, _prompt(23, seed=16), max_new_tokens=8))  # 3 pages
+    eng.step()
+    assert eng.running.all() and eng.pool.n_free == 0
+    # simulate slot 0 being two page-crossings ahead (e.g. a speculative
+    # burst): its next append must claim 2 pages at once
+    eng.state["positions"] = eng.state["positions"].at[0].set(24)
+    eng.state["lengths"] = eng.state["lengths"].at[0].set(24)
+    held_before = eng.kv.held(0)
+    allocs_before = eng.stats["page_allocs"]
+    eng._grow()                                  # evicts slot 1, grows 2
+    grown = eng.kv.held(0) - held_before
+    assert grown == 2
+    assert eng.stats["page_allocs"] - allocs_before == grown

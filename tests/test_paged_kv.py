@@ -93,6 +93,9 @@ def test_paged_engine_matches_dense_engine(tiny):
             eng.submit(Request(i, p.copy(), max_new_tokens=12))
         done = eng.run_until_done()
         assert len(done) == len(reqs)
+        # only prefix-cache-pinned blocks may remain; dropping them must
+        # return the pool to fully free (refcounts balance)
+        eng.prefix.clear()
         assert eng.pool.n_free == eng.pool.n_pages
         outs[layout] = {r.req_id: r.tokens_out for r in done}
     assert outs["paged"] == outs["dense"]
@@ -130,6 +133,7 @@ def test_paged_no_host_tier_never_corrupts(tiny):
             eng.submit(Request(i, p.copy(), max_new_tokens=16))
         done = eng.run_until_done()
         assert len(done) == len(reqs)
+        eng.prefix.clear()
         assert eng.pool.n_free == eng.pool.n_pages
         outs[layout] = {r.req_id: r.tokens_out for r in done}
     assert outs["paged"] == outs["dense"]

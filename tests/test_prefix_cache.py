@@ -1,60 +1,136 @@
-"""PrefixCache: LRU eviction order, hit_rate accounting, zero capacity."""
+"""PrefixCache: longest-prefix block chains, LRU + cascade eviction,
+retain/release payload pinning, hit accounting."""
 import numpy as np
+import pytest
 
-from repro.serve.prefix_cache import PrefixCache, prompt_key
-
-
-def _toks(*vals):
-    return np.asarray(vals, np.int32)
+from repro.serve.prefix_cache import PrefixCache, block_key, prompt_key
 
 
-def test_lru_eviction_order():
-    pc = PrefixCache(capacity=2)
-    a, b, c = _toks(1, 2), _toks(3, 4), _toks(5, 6)
-    pc.put(a, "A")
-    pc.put(b, "B")
-    assert pc.get(a) == "A"        # refresh a -> b is now LRU
-    pc.put(c, "C")                 # evicts b, not a
-    assert pc.get(b) is None
-    assert pc.get(a) == "A"
-    assert pc.get(c) == "C"
+def _toks(n, seed=0):
+    return np.random.default_rng(seed).integers(1, 250, size=n).astype(np.int32)
 
 
-def test_put_refreshes_recency():
-    pc = PrefixCache(capacity=2)
-    a, b, c = _toks(1), _toks(2), _toks(3)
-    pc.put(a, 1)
-    pc.put(b, 2)
-    pc.put(a, 10)                  # re-put refreshes a AND overwrites
-    pc.put(c, 3)                   # evicts b (LRU), not a
-    assert pc.get(a) == 10
-    assert pc.get(b) is None
-    assert len(pc._d) == 2
+def _mk(capacity=8, block=4, **kw):
+    return PrefixCache(capacity=capacity, block=block, **kw)
 
 
-def test_hit_rate_accounting():
-    pc = PrefixCache(capacity=4)
-    a, b = _toks(1, 2, 3), _toks(9)
-    assert pc.hit_rate == 0.0      # no lookups yet: no div-by-zero
-    assert pc.get(a) is None       # miss
-    pc.put(a, "A")
-    assert pc.get(a) == "A"        # hit
-    assert pc.get(b) is None       # miss
-    assert pc.hits == 1 and pc.misses == 2
-    assert pc.hit_rate == 1 / 3
-    assert pc.hash_ops == 3        # every lookup hashes exactly once
+def test_match_full_partial_miss():
+    pc = _mk()
+    p = _toks(12)                               # 3 full blocks of 4
+    pc.insert(p, 3, lambda b: f"P{b}")
+    # full hit clamps to leave >= 1 token to compute: (12-1)//4 = 2 blocks
+    n, payloads = pc.match(p)
+    assert n == 8 and payloads == ["P0", "P1"]
+    # one token past the last block boundary unlocks the third block
+    n, payloads = pc.match(np.concatenate([p, _toks(1, seed=9)]))
+    assert n == 12 and payloads == ["P0", "P1", "P2"]
+    # partial: same first block, different second
+    q = p.copy()
+    q[5] += 1
+    n, payloads = pc.match(q)
+    assert n == 4 and payloads == ["P0"]
+    # miss: different first token
+    q = p.copy()
+    q[0] += 1
+    assert pc.match(q) == (0, [])
+    assert pc.hits == 3 and pc.misses == 1
+
+
+def test_chain_keys_commit_to_prefix():
+    """The same block content under a different parent is a different
+    entry — block 2 of prompt A never answers block 2 of prompt B."""
+    pc = _mk()
+    blk = _toks(4, seed=1)
+    a = np.concatenate([_toks(4, seed=2), blk, _toks(1, seed=3)])
+    b = np.concatenate([_toks(4, seed=4), blk, _toks(1, seed=5)])
+    pc.insert(a, 2, lambda i: f"A{i}")
+    n, payloads = pc.match(b)
+    assert n == 0 and payloads == []
+    assert block_key("x", blk) != block_key("y", blk)
+
+
+def test_payload_fn_called_only_for_new_blocks():
+    pc = _mk()
+    p = _toks(13)
+    calls = []
+
+    def payload(b):
+        calls.append(b)
+        return b
+    assert pc.insert(p, 3, payload) == 3
+    assert calls == [0, 1, 2]
+    # re-donation of a longer prompt sharing the prefix adds only block 3
+    q = np.concatenate([p[:12], _toks(8, seed=7)])
+    calls.clear()
+    assert pc.insert(q, 4, payload) == 1
+    assert calls == [3]
+
+
+def test_retain_release_balance_on_eviction():
+    retained, released = [], []
+    pc = _mk(capacity=2, retain=retained.append, release=released.append)
+    pc.insert(_toks(13, seed=1), 3, lambda b: ("a", b))
+    assert len(retained) == 3
+    assert len(released) == 1                   # LRU-evicted down to 2
+    pc.clear()
+    assert sorted(released) == sorted(retained)
+
+
+def test_lru_prefers_leaves_over_shared_roots():
+    """Walk refresh order keeps a parent at least as recent as its
+    children, so eviction takes the deepest stale block first."""
+    pc = _mk(capacity=8)
+    p = _toks(13, seed=2)
+    pc.insert(p, 3, lambda b: b)
+    assert pc.evict_one()
+    # deepest block (2) evicted; blocks 0-1 still answer
+    n, payloads = pc.match(p)
+    assert n == 8 and payloads == [0, 1]
+
+
+def test_eviction_cascades_to_descendants():
+    released = []
+    pc = _mk(capacity=8, release=released.append)
+    p = _toks(13, seed=3)
+    pc.insert(p, 3, lambda b: b)
+    pc._evict(block_key("", p[:4]))             # drop the chain root
+    assert len(pc) == 0                         # children went with it
+    assert sorted(released) == [0, 1, 2]
+    assert pc.match(p) == (0, [])
 
 
 def test_capacity_zero_caches_nothing():
-    pc = PrefixCache(capacity=0)
-    a = _toks(1, 2)
-    pc.put(a, "A")
-    assert len(pc._d) == 0
-    assert pc.get(a) is None
+    pc = _mk(capacity=0)
+    p = _toks(9)
+    assert pc.insert(p, 2, lambda b: b) == 0
+    assert len(pc) == 0
+    assert pc.match(p) == (0, [])
     assert pc.hit_rate == 0.0
-    pc.put(a, "A")                 # repeated puts stay a no-op, no error
-    assert pc.get(a) is None
-    assert pc.misses == 2
+
+
+def test_hit_accounting():
+    pc = _mk()
+    p = _toks(9)
+    assert pc.hit_rate == 0.0                   # no lookups: no div-by-zero
+    assert pc.match(p) == (0, [])               # miss
+    pc.insert(p, 2, lambda b: b)
+    n, _ = pc.match(p)                          # hit
+    assert n == 8
+    assert pc.match(_toks(9, seed=5))[0] == 0   # miss
+    assert pc.hits == 1 and pc.misses == 2
+    assert pc.hit_rate == pytest.approx(1 / 3)
+    assert pc.tokens_reused == 8
+    assert pc.hash_ops > 0
+
+
+def test_short_prompt_never_matches():
+    """Prompts within one block (or exactly one block) leave everything
+    to compute — the leave-one-token rule."""
+    pc = _mk(block=4)
+    p = _toks(4)
+    pc.insert(p, 1, lambda b: b)
+    assert pc.match(p) == (0, [])               # (4-1)//4 == 0 blocks
+    assert pc.match(p[:3]) == (0, [])
 
 
 def test_prompt_key_content_addressed():

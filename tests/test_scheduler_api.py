@@ -218,6 +218,7 @@ def test_uniform_class_equivalence_paged_backend(tiny):
     for sched in BUILTINS:
         done, eng = _run(cfg, params, reqs, sched, slots=2,
                          kv_layout="paged")
+        eng.prefix.clear()                  # drop cache-pinned blocks
         assert eng.pool.n_free == eng.pool.n_pages
         results[sched] = {r.req_id: r.tokens_out for r in done}
     assert results["priority"] == results["fcfs"]

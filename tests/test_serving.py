@@ -43,7 +43,7 @@ def test_engine_completes_all(tiny):
 def test_prefix_cache_hit_is_deterministic(tiny):
     cfg, params = tiny
     eng = _mk(cfg, params)
-    p = np.arange(1, 20, dtype=np.int32)
+    p = np.arange(1, 20, dtype=np.int32)    # 19 tokens = 2 full 8-blocks + 3
     eng.submit(Request(0, p, max_new_tokens=5))
     eng.submit(Request(1, p.copy(), max_new_tokens=5))
     done = eng.run_until_done()
@@ -51,7 +51,9 @@ def test_prefix_cache_hit_is_deterministic(tiny):
     b = [r for r in done if r.req_id == 1][0].tokens_out
     assert a == b                       # greedy + shared prefix state
     assert eng.stats["prefix_hits"] == 1
-    assert eng.stats["prefills"] == 1   # second prompt skipped prefill
+    # the second prompt reused both full blocks and computed only the tail
+    assert eng.stats["prefix_tokens_reused"] == 16
+    assert eng.stats["prefill_tokens"] == 19 + 3
 
 
 def test_decode_matches_unparked_sequence(tiny):
