@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-sched bench-prefill bench quickstart
+.PHONY: test bench-smoke bench-sched bench-prefill bench-decode bench \
+	quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -17,6 +18,9 @@ bench-sched:
 
 bench-prefill:
 	$(PY) benchmarks/chunked_prefill.py --smoke
+
+bench-decode:
+	$(PY) benchmarks/decode_throughput.py --smoke
 
 bench:
 	$(PY) benchmarks/run.py

@@ -33,8 +33,12 @@ def _engine(cfg, params, **kw):
 def _jitter(cfg, params, chunk: int, long_len: int, steps: int = 24) -> dict:
     """Per-step wall times while a long prompt lands mid-decode."""
     from repro.serve.api import Request
+    # decode_span=1 so each timed step carries exactly one decode token
+    # per running slot — the short decoders must outlive the long
+    # prompt's ingestion for the HOL-blocking comparison to mean
+    # anything (at the default span they'd finish during warm-up)
     eng = _engine(cfg, params, slots=4, cache_len=256, n_pages=160,
-                  page_size=16, prefill_chunk=chunk)
+                  page_size=16, prefill_chunk=chunk, decode_span=1)
     rng = np.random.default_rng(0)
     for i in range(3):                          # three short decoders
         eng.submit(Request(i, rng.integers(

@@ -125,9 +125,12 @@ def run_timing(steps: int = 8) -> str:
             eng = ServingEngine(cfg, params, EngineConfig(
                 slots=4, cache_len=cache_len, page_size=16,
                 n_pages=4 * cache_len // 16, eos_token=-1,
-                kv_layout=layout))
-            # prefill emits 1 token, 2 warm-up steps + `steps` timed steps
-            # emit one each: the request must outlive the timed loop
+                kv_layout=layout, decode_span=1))
+            # decode_span=1: this measures the per-*step* decode cost
+            # (span amortization is benchmarks/decode_throughput.py's
+            # job). Prefill emits 1 token, 2 warm-up steps + `steps`
+            # timed steps emit one each: the request must outlive the
+            # timed loop
             eng.submit(Request(0, prompt, max_new_tokens=steps + 4))
             eng.step()                       # prefill + compile decode
             eng.step()

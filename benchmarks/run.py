@@ -17,13 +17,16 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
-    from benchmarks import (building_blocks, chunked_prefill, e2e,
-                            kv_scaling, module_footprint, reliability,
-                            resource_miss, scheduler_qos)
+    from benchmarks import (building_blocks, chunked_prefill,
+                            decode_throughput, e2e, kv_scaling,
+                            module_footprint, reliability, resource_miss,
+                            scheduler_qos)
     smoke = "--smoke" in sys.argv
     if smoke:
         sections = [
             ("sec3_chunked_prefill", lambda: chunked_prefill.run(smoke=True)),
+            ("sec3_decode_spans",
+             lambda: decode_throughput.run(smoke=True)),
             ("fig14_e2e_prototype", e2e.run),
         ]
     else:
@@ -34,6 +37,7 @@ def main() -> None:
             ("fig13_kv_scaling", kv_scaling.run),
             ("sec4_qos_scheduler", scheduler_qos.run),
             ("sec3_chunked_prefill", chunked_prefill.run),
+            ("sec3_decode_spans", decode_throughput.run),
             ("sec6.1_reliability_gbn_sr", reliability.run),
             ("fig14_e2e_prototype", e2e.run),
         ]

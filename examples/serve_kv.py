@@ -26,6 +26,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="page-aligned chunked-prefill width "
                          "(0 = monolithic)")
+    ap.add_argument("--decode-span", type=int, default=8,
+                    help="decode steps fused into one jitted scan between "
+                         "host syncs (1 = per-step decode)")
     args = ap.parse_args()
 
     cfg = SMOKE_CONFIGS["qwen3-8b"]
@@ -37,7 +40,7 @@ def main():
     eng = make_engine(cfg, params, EngineConfig(
         slots=4, cache_len=128, n_pages=28, page_size=8, eos_token=-1,
         kv_layout=args.kv_layout, scheduler=args.scheduler, qos_classes=2,
-        prefill_chunk=args.prefill_chunk))
+        prefill_chunk=args.prefill_chunk, decode_span=args.decode_span))
 
     rng = np.random.default_rng(0)
     base_prompt = rng.integers(1, cfg.vocab_size, size=24).astype(np.int32)

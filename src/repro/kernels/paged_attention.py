@@ -129,10 +129,35 @@ def _paged_decode_pallas(q, k_pages, v_pages, page_table, lengths, *,
 
 def _paged_decode_jnp(q, k_pages, v_pages, page_table, lengths, *, scale):
     # one implementation of gathered paged softmax exists: the ref oracle
-    # (it stays an *independent* check for the Pallas kernel above)
+    # (it stays an *independent* check for the Pallas kernel above).
+    # Both backends pay O(MP) for the table walk — the gather touches
+    # every table entry and the Pallas grid runs MP sequential steps —
+    # so callers bound MP to the batch's live page count via
+    # `live_table_width` (the engine's PagedKV.sync exports tables at
+    # that bucketed width) instead of the worst-case max_pages.
     from repro.kernels.ref import paged_decode_attention_ref
     return paged_decode_attention_ref(q, k_pages, v_pages, page_table,
                                       lengths, scale=scale)
+
+
+def live_table_width(n_live_pages: int, max_pages: int) -> int:
+    """Page-table width covering ``n_live_pages``, bucketed to powers of
+    two (capped at ``max_pages``).
+
+    Exporting a max_pages-wide table makes every decode pay for the
+    worst-case sequence length: the jnp oracle gathers
+    ``k_pages[page_table]`` for all MP entries and the Pallas kernel's
+    grid runs MP sequential steps, live or not. Bucketing the exported
+    width to the next power of two bounds the work by the batch's
+    actual page residency while capping the number of distinct compiled
+    decode shapes at log2(max_pages). Entries past a slot's live pages
+    are id 0 — attention masks them via ``lengths``, so any width >=
+    the live count is math-identical (pinned by tests).
+    """
+    w = 1
+    while w < min(max(n_live_pages, 1), max_pages):
+        w *= 2
+    return min(w, max_pages)
 
 
 # --------------------------------------------------------------------------

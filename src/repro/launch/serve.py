@@ -45,6 +45,9 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=0,
                     help="max prefill tokens ingested per engine step "
                          "(0 derives it from --prefill-chunk)")
+    ap.add_argument("--decode-span", type=int, default=8,
+                    help="decode steps fused into one jitted scan between "
+                         "host syncs (1 = per-step decode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -57,7 +60,8 @@ def main():
         kv_layout=args.kv_layout, scheduler=args.scheduler,
         qos_classes=args.qos_classes, eos_token=-1,
         prefill_chunk=args.prefill_chunk,
-        prefill_budget=args.prefill_budget))
+        prefill_budget=args.prefill_budget,
+        decode_span=args.decode_span))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(i, rng.integers(
@@ -68,9 +72,10 @@ def main():
     done = eng.run_until_done()
     dt = time.perf_counter() - t0
     print(f"completed {len(done)}/{args.requests} in {dt:.1f}s  "
-          f"({eng.stats['decode_tokens'] / dt:.1f} decode tok/s)  "
+          f"({eng.stats['decode_tokens'] / dt:.1f} decode tok/s, "
+          f"{eng.stats['host_syncs']} host syncs)  "
           f"[{args.kv_layout} kv, {args.scheduler} scheduler, "
-          f"{n_pages} pages]")
+          f"{n_pages} pages, span {args.decode_span}]")
     print("completion order (req_id:qos):",
           " ".join(f"{r.req_id}:{r.qos}" for r in done))
     print("stats:", eng.stats)

@@ -312,6 +312,49 @@ def decode_step(params, tokens, state, cfg: ModelConfig, policy: Policy,
     return logits, new_state
 
 
+def decode_span(params, tokens, state, cfg: ModelConfig, policy: Policy,
+                active, budgets, *, span: int, eos_token: int,
+                cache_len: int):
+    """Run up to ``span`` decode steps inside one jitted ``lax.scan``.
+
+    The serving engine's per-token host round-trip (dispatch, argmax
+    transfer, position reads) is the decode path's bottleneck on small
+    models — the JingZhao doorbell argument: the host should ring once
+    per batch of work, not once per packet. This entry point keeps the
+    whole span device-resident; the engine syncs host state once per
+    span instead of once per token.
+
+    tokens: [B] int32 — each slot's last emitted token; active: [B] bool
+    — slots decoding this span; budgets: [B] int32 — tokens each slot
+    may emit this span (<= span; the engine folds max_new_tokens
+    remaining and reserved page headroom into this one counter, since
+    alloc-on-append cannot fire mid-scan). Stop conditions evaluate on
+    device: a slot freezes through the existing active-mask mechanics
+    (caches bit-frozen, counters halted, paged writes dropped) as soon
+    as it emits ``eos_token``, exhausts its budget, or fills
+    ``cache_len``; the rest of the batch keeps decoding.
+
+    Returns (toks [span, B] int32, emit [span, B] bool, state): emit[t,i]
+    marks a real emission at scan step t, so the host-applied token
+    streams are byte-identical to per-step decode (span == 1 is exactly
+    ``decode_step``).
+    """
+    def body(carry, _):
+        toks, st, act, left = carry
+        logits, st = decode_step(params, toks, st, cfg, policy, active=act)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(act, nxt, toks)
+        left = left - act.astype(jnp.int32)
+        done = ((nxt == jnp.int32(eos_token)) | (left <= 0)
+                | (st["positions"] >= cache_len))
+        return (nxt, st, act & ~done, left), (nxt, act)
+
+    carry = (tokens, state, active, budgets)
+    (_, state, _, _), (toks, emit) = jax.lax.scan(body, carry, None,
+                                                  length=span)
+    return toks, emit, state
+
+
 def init_serve_state(cfg: ModelConfig, batch: int, cache_len: int,
                      dtype=None, filled: bool = True, tp: int = 1) -> dict:
     """Fresh (or 'already full', for dry-runs) decoding state."""

@@ -53,6 +53,9 @@ class EngineConfig:
     prefill_budget: int = 0       # prefill tokens per engine step, spent
                                   # in whole chunks (min. one chunk/step);
                                   # 0 derives it from prefill_chunk
+    decode_span: int = 8          # decode steps fused into one jitted
+                                  # lax.scan between host syncs (1 =
+                                  # per-step decode; DESIGN.md §3.6)
     eos_token: int = 0
     host_offload: bool = True     # VoQ overflow tier
     kv_layout: str = "dense"      # KVBackend name: "dense" | "paged"
@@ -109,6 +112,11 @@ class KVBackend(Protocol):
     def init_state(self) -> dict: ...
     def footprint(self, req: Request) -> int: ...
     def append(self, req_id: int, n_tokens: int) -> bool: ...
+    # decode spans: claim page headroom for a whole span up front —
+    # alloc-on-append cannot fire inside the jitted scan, so the engine
+    # reserves `n_tokens` total capacity before dispatch and shrinks a
+    # slot's span budget to what the pool actually granted
+    def reserve_span(self, req_id: int, n_tokens: int) -> bool: ...
     def held(self, req_id: int) -> int: ...
     def prefill_into_slot(self, state: dict, slot: int, req_id: int,
                           caches, length: int) -> dict: ...

@@ -16,15 +16,22 @@ behind protocols and are selected by name through `EngineConfig`:
 The engine loop itself is layout- and policy-free: admit from the
 scheduler, restore due unparks, stream one chunk of each PREFILLING
 slot's prompt under the per-step token budget (DESIGN.md §3.4), run the
-backend's alloc-on-append pass, sync indirection tables, decode one step
-with the active mask freezing parked slots. Prompt ingestion is the
-paper's packet-granular streaming: with `prefill_chunk > 0` a long
-prompt flows through the frame in page-aligned chunks interleaved with
-decode steps, so it never head-of-line-blocks running sequences. The
-engine is exact (not a simulation): parked slots' caches are bit-frozen,
-evicted KV really moves to host numpy arrays and back, and prompts
-sharing a page-aligned prefix share physical pages through the
-refcounted block cache (DESIGN.md §3.5).
+backend's alloc-on-append pass, reserve page headroom for the coming
+decode span, sync indirection tables, then decode up to `decode_span`
+tokens inside one jitted lax.scan with the active mask freezing parked
+slots (DESIGN.md §3.6). Decode is the paper's doorbell batching: stop
+conditions (EOS, max_new_tokens, cache_len, span budget) evaluate on
+device, and the host syncs emitted tokens/positions once per span
+instead of once per token — O(tokens/span) round-trips on the hottest
+path. Prompt ingestion is the paper's packet-granular streaming: with
+`prefill_chunk > 0` a long prompt flows through the frame in
+page-aligned chunks interleaved with decode spans, so it never
+head-of-line-blocks running sequences. The engine is exact (not a
+simulation): parked slots' caches are bit-frozen, evicted KV really
+moves to host numpy arrays and back, prompts sharing a page-aligned
+prefix share physical pages through the refcounted block cache
+(DESIGN.md §3.5), and span decode is token-for-token identical to
+per-step decode in both KV layouts.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ from repro.serve.api import (EngineConfig, KVBackend, ParkingTransport,
 # slot helpers in serve/kv_backends.py; older call sites import them here.
 from repro.serve.kv_backends import (_slot_extract, _slot_insert,  # noqa: F401
                                      _slot_restore, _slot_set)
+from repro.kernels.paged_attention import live_table_width
 from repro.serve.parking import HostParkingTransport
 from repro.serve.prefix_cache import PrefixCache
 from repro.sharding.policy import NULL_POLICY, Policy
@@ -66,6 +74,9 @@ class ServingEngine:
                 f"prefill_chunk {ecfg.prefill_chunk} must be a page_size "
                 f"({ecfg.page_size}) multiple so chunk boundaries stay "
                 f"page-aligned")
+        if ecfg.decode_span < 1:
+            raise ValueError(
+                f"decode_span must be >= 1, got {ecfg.decode_span}")
         self.kv = kv_backend or make_kv_backend(ecfg.kv_layout, cfg, ecfg)
         self.state = self.kv.init_state()
         self.sched = scheduler or make_scheduler(
@@ -89,15 +100,19 @@ class ServingEngine:
             retain=self.kv.cache_retain, release=self.kv.cache_release)
         self._stalled: set = set()               # req_ids frozen in place
         self.completed: List[Request] = []
-        self.stats = {"decode_steps": 0, "decode_tokens": 0, "prefills": 0,
+        self.stats = {"decode_steps": 0, "decode_tokens": 0,
+                      "decode_spans": 0, "host_syncs": 0, "span_shrinks": 0,
+                      "prefills": 0,
                       "prefill_tokens": 0, "prefill_chunks": 0,
                       "parked": 0, "unparked": 0,
                       "prefix_hits": 0, "prefix_tokens_reused": 0,
                       "page_allocs": 0, "pages_peak": 0,
                       "preempt_restarts": 0}
 
-        self._decode = jax.jit(
-            lambda p, t, s, a: lm.decode_step(p, t, s, cfg, policy, active=a))
+        # one compiled scan per executed span length; lengths are pow2-
+        # bucketed (capped at decode_span) so shrunken spans cost at most
+        # log2(decode_span) extra compiles
+        self._span_fns: dict = {}
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, t, cfg, policy, cache_len=L))
         self._prefill_chunk = jax.jit(
@@ -306,22 +321,30 @@ class ServingEngine:
             prompt, n_blocks,
             lambda b: self.kv.block_payload(self.state, slot, req.req_id, b))
 
-    def _append_reclaim(self, req_id: int, n_tok: int) -> bool:
-        """`kv.append`, dropping LRU cached blocks under page pressure —
-        cache-pinned pages are the cheapest to free (no live slot
-        recomputes, a future request merely re-prefills its prefix)."""
-        if self.kv.append(req_id, n_tok):
+    def _claim_reclaim(self, claim) -> bool:
+        """Run a page-claiming thunk, dropping LRU cached blocks under
+        page pressure — cache-pinned pages are the cheapest to free (no
+        live slot recomputes, a future request merely re-prefills its
+        prefix)."""
+        if claim():
             return True
         if self.kv.needs_growth:
-            # evict until the append fits or the cache is empty: an
+            # evict until the claim fits or the cache is empty: an
             # eviction that frees nothing (blocks still shared by live
             # sequences) may still be followed by freeable chains later
             # in LRU order, and a flushed cache is cheaper than parking
             # a live decode or bouncing an admission
             while self.prefix.evict_one():
-                if self.kv.append(req_id, n_tok):
+                if claim():
                     return True
         return False
+
+    def _append_reclaim(self, req_id: int, n_tok: int) -> bool:
+        return self._claim_reclaim(lambda: self.kv.append(req_id, n_tok))
+
+    def _reserve_reclaim(self, req_id: int, n_tok: int) -> bool:
+        return self._claim_reclaim(
+            lambda: self.kv.reserve_span(req_id, n_tok))
 
     def _append_or_free(self, req_id: int, n_tok: int,
                         for_class: Optional[int]) -> bool:
@@ -413,7 +436,6 @@ class ServingEngine:
         (release pages, requeue for fresh prefill — recompute preemption).
         """
         changed = False
-        positions = np.asarray(self.state["positions"])
         for i in range(self.ecfg.slots):
             req = self.slot_req[i]
             if req is None or not self.active[i] or self.prefilling[i]:
@@ -421,14 +443,15 @@ class ServingEngine:
             if not self.running[i]:
                 if req.req_id in self._stalled:
                     before = self.kv.held(req.req_id)
-                    if self._append_reclaim(req.req_id, int(positions[i]) + 1):
+                    if self._append_reclaim(req.req_id,
+                                            self._slot_pos(req) + 1):
                         self._stalled.discard(req.req_id)
                         self.running[i] = True
                         self.stats["page_allocs"] += (
                             self.kv.held(req.req_id) - before)
                         changed = True
                 continue
-            pos = int(positions[i])
+            pos = self._slot_pos(req)        # host bookkeeping, no device read
             before = self.kv.held(req.req_id)
             if self._append_reclaim(req.req_id, pos + 1):
                 grown = self.kv.held(req.req_id) - before
@@ -471,6 +494,86 @@ class ServingEngine:
         self._requeue(req)
         self.stats["preempt_restarts"] += 1
 
+    # -- decode spans (DESIGN.md §3.6) -------------------------------------
+    def _span_fn(self, span: int):
+        """The jitted fused-decode scan for one executed span length."""
+        fn = self._span_fns.get(span)
+        if fn is None:
+            cfg, policy = self.cfg, self.policy
+            eos, L = self.ecfg.eos_token, self.ecfg.cache_len
+            fn = jax.jit(lambda p, t, s, a, b: lm.decode_span(
+                p, t, s, cfg, policy, a, b, span=span, eos_token=eos,
+                cache_len=L))
+            self._span_fns[span] = fn
+        return fn
+
+    @staticmethod
+    def _slot_pos(req: Request) -> int:
+        """A decoding slot's device position, from host bookkeeping alone
+        (no device read): prefill leaves `positions = len(prompt)` with
+        one emitted token, and every span emission advances the device
+        counter by exactly one (frozen slots emit nothing)."""
+        return len(req.prompt) + len(req.tokens_out) - 1
+
+    def _reserve_headroom(self, req_id: int, pos: int, want: int) -> int:
+        """Claim pages covering up to `want` upcoming decode tokens for
+        one slot; returns the granted token count (>= 1 — `_grow` already
+        secured the next token or the slot would not be running). Uses
+        the prefix-cache reclaim valve but never the VoQ eviction valve:
+        parking a live sequence to lengthen another's span would trade
+        one slot's throughput for another's, a wash."""
+        if self._reserve_reclaim(req_id, pos + want):
+            return want
+        # the reclaim loop drained the cache; what is left is exactly the
+        # pages already held plus the free list
+        ps = self.ecfg.page_size
+        avail = (self.kv.held(req_id) + self.pool.n_free) * ps - pos
+        got = int(max(1, min(want, avail)))
+        if got > 1:
+            self.kv.reserve_span(req_id, pos + got)   # fits by construction
+        self.stats["span_shrinks"] += 1
+        return got
+
+    def _reserve_decode_span(self, act: np.ndarray):
+        """Per-slot span budgets + the executed span length.
+
+        budgets[i] folds the request's remaining max_new_tokens, the
+        cache_len distance, and (paged) the page headroom this slot
+        could actually reserve into one on-device counter; a slot whose
+        budget runs out mid-span freezes via the active mask and retries
+        next span. The executed span is the pow2 bucket of the largest
+        budget so shrunken spans reuse at most log2(decode_span)
+        compiled scans."""
+        span = self.ecfg.decode_span
+        L = self.ecfg.cache_len
+        budgets = np.zeros(self.ecfg.slots, np.int32)
+        grew = False
+        for i in np.nonzero(act)[0]:
+            req = self.slot_req[int(i)]
+            pos = self._slot_pos(req)
+            want = max(1, min(span, req.max_new_tokens - len(req.tokens_out),
+                              L - pos))
+            if want > 1 and self.kv.needs_growth:
+                before = self.kv.held(req.req_id)
+                want = self._reserve_headroom(req.req_id, pos, want)
+                grown = self.kv.held(req.req_id) - before
+                if grown:
+                    # per-slot held delta, NOT a pool n_used diff: an
+                    # eviction that frees one page while the claim takes
+                    # another nets to zero pool change but still rewrote
+                    # this slot's table row
+                    self.stats["page_allocs"] += grown
+                    grew = True
+            budgets[i] = want
+        if grew:
+            self.kv.mark_dirty()             # headroom pages joined tables
+            self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                           self.pool.n_used)
+        # one bucketing rule for both compile caps: span lengths and the
+        # paged table width share live_table_width's pow2-with-cap shape
+        span_exec = live_table_width(int(budgets.max()), span)
+        return budgets, span_exec
+
     # -- main loop ---------------------------------------------------------
     def step(self):
         self._admit()
@@ -478,37 +581,66 @@ class ServingEngine:
         self._prefill_step()
         if self.kv.needs_growth:
             self._grow()
+        act = self.active & self.running
+        if act.any():
+            # reserve before sync: headroom pages must be in the exported
+            # tables the scan chases
+            budgets, span_exec = self._reserve_decode_span(act)
         self.state = self.kv.sync(
             self.state,
             [r.req_id if r is not None else None for r in self.slot_req])
-        if not (self.active & self.running).any():
+        if not act.any():
             return                           # only prefilling/parked slots
         tokens = np.zeros(self.ecfg.slots, np.int32)
         for i, req in enumerate(self.slot_req):
             if req is not None and req.tokens_out:
                 tokens[i] = req.tokens_out[-1]
-        act = jnp.asarray(self.active & self.running)
-        logits, self.state = self._decode(
-            self.params, jnp.asarray(tokens), self.state, act)
-        self.stats["decode_steps"] += 1
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        toks, emit, self.state = self._span_fn(span_exec)(
+            self.params, jnp.asarray(tokens), self.state,
+            jnp.asarray(act), jnp.asarray(budgets))
+        self.stats["decode_steps"] += span_exec
+        self.stats["decode_spans"] += 1
+        # ONE blocking device->host sync per span — the stacked emissions
+        # and their per-step mask; positions are rederived from host
+        # bookkeeping (_slot_pos), not transferred
+        self.stats["host_syncs"] += 1
+        toks, emit = jax.device_get((toks, emit))
         for i in range(self.ecfg.slots):
             req = self.slot_req[i]
-            if req is None or not (self.active[i] and self.running[i]):
+            if req is None or not act[i]:
                 continue
-            tok = int(nxt[i])
-            req.tokens_out.append(tok)
-            self.stats["decode_tokens"] += 1
+            new = toks[emit[:, i], i]        # slot i's emissions, in order
+            req.tokens_out.extend(int(t) for t in new)
+            self.stats["decode_tokens"] += len(new)
             done = (len(req.tokens_out) >= req.max_new_tokens
-                    or tok == self.ecfg.eos_token
-                    or int(self.state["positions"][i]) >= self.ecfg.cache_len)
+                    or (len(new) and int(new[-1]) == self.ecfg.eos_token)
+                    or self._slot_pos(req) >= self.ecfg.cache_len)
             if done:
                 self._complete(i, req)
 
     def run_until_done(self, max_steps: int = 10_000):
+        """Drive the engine until every submitted request completes.
+
+        Exhausting `max_steps` with work still queued/active/parked
+        raises instead of returning silently — a caller that drops
+        stranded requests on the floor has no way to notice otherwise.
+        `stats["incomplete"]` records the on-slot (active or parked)
+        req_ids; still-queued requests stay in the scheduler (the
+        protocol has no enumeration) and are reported as a count — the
+        engine remains resumable with another run_until_done call."""
         for _ in range(max_steps):
             if (not self.active.any() and self.sched.pending == 0
                     and self.transport.in_flight == 0):
-                break
+                return self.completed
             self.step()
-        return self.completed
+        if (not self.active.any() and self.sched.pending == 0
+                and self.transport.in_flight == 0):
+            return self.completed
+        stranded = sorted({r.req_id for r in self.slot_req if r is not None})
+        self.stats["incomplete"] = stranded
+        raise RuntimeError(
+            f"run_until_done exhausted max_steps={max_steps} with "
+            f"{len(stranded)} request(s) still on slots "
+            f"(req_ids {stranded}), {self.sched.pending} more queued in "
+            f"the scheduler and {self.transport.in_flight} parked in "
+            f"transport; call run_until_done again to resume")

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.resource import PagePool
+from repro.kernels.paged_attention import live_table_width
 from repro.models import lm
 from repro.models import transformer as tf
 from repro.serve.api import (EngineConfig, ParkMeta, Request,
@@ -34,6 +35,14 @@ class _PooledKV:
 
     def append(self, req_id: int, n_tokens: int) -> bool:
         """Alloc-on-append: grow req's page claim to cover n_tokens."""
+        return self.pool.ensure_capacity(req_id, n_tokens)
+
+    def reserve_span(self, req_id: int, n_tokens: int) -> bool:
+        """Decode-span headroom: claim pages covering `n_tokens` total
+        tokens *before* a fused decode span runs — alloc-on-append
+        cannot fire inside the jitted lax.scan (DESIGN.md §3.6). Same
+        page accounting as `append`; dense slabs are covered by the
+        admission footprint, so for them this never allocates."""
         return self.pool.ensure_capacity(req_id, n_tokens)
 
     def held(self, req_id: int) -> int:
@@ -251,8 +260,16 @@ class PagedKV(_PooledKV):
     def sync(self, state: dict,
              slot_req_ids: List[Optional[int]]) -> dict:
         if self._dirty:
+            # export the MTT at the batch's live width (pow2-bucketed),
+            # not max_pages: the decode gather/grid walks every exported
+            # entry, so table width is decode cost. Any growth or
+            # release dirties the table, so the bucket can never lag
+            # behind the true live page count.
+            live = max((len(self.pool.tables.get(r, []))
+                        for r in slot_req_ids if r is not None), default=0)
+            width = live_table_width(live, self.max_pages)
             state["page_table"] = jnp.asarray(
-                self.pool.table_matrix(slot_req_ids, self.max_pages))
+                self.pool.table_matrix(slot_req_ids, width))
             self._dirty = False
         return state
 

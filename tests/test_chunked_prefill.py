@@ -145,11 +145,11 @@ def test_chunk_must_be_page_aligned(tiny):
 def test_long_prompt_does_not_stall_decodes(tiny):
     """With chunking on, a prompt spanning many chunks is ingested one
     chunk per step while every running slot keeps gaining exactly one
-    decode token per step."""
+    decode token per step (decode_span=1 so 'step' means 'token')."""
     cfg, params = tiny
     eng = ServingEngine(cfg, params, EngineConfig(
         slots=2, cache_len=128, n_pages=48, page_size=8, eos_token=-1,
-        prefill_chunk=8))
+        prefill_chunk=8, decode_span=1))
     short = Request(0, _prompt(5, seed=1), max_new_tokens=40)
     eng.submit(short)
     eng.step()                      # short: prefill + first decode token
@@ -292,7 +292,7 @@ def test_shared_prefix_survives_sharer_park(tiny):
 
     eng = ServingEngine(cfg, params, EngineConfig(
         slots=2, cache_len=64, n_pages=32, page_size=8, eos_token=-1,
-        kv_layout="paged", prefill_chunk=8))
+        kv_layout="paged", prefill_chunk=8, decode_span=1))
     eng.submit(Request(0, p1.copy(), max_new_tokens=4))   # seeds the cache
     eng.run_until_done()
     r1 = Request(1, p1.copy(), max_new_tokens=12)
@@ -393,7 +393,10 @@ def test_grow_counts_actual_pages_on_eviction_retry(tiny):
     eng.step()
     assert eng.running.all() and eng.pool.n_free == 0
     # simulate slot 0 being two page-crossings ahead (e.g. a speculative
-    # burst): its next append must claim 2 pages at once
+    # burst): its next append must claim 2 pages at once. Positions are
+    # derived from host bookkeeping (prompt + tokens_out - 1), so the
+    # burst is modeled on both sides of that equation.
+    eng.slot_req[0].tokens_out.extend([1] * 9)       # 15+10-1 == 24
     eng.state["positions"] = eng.state["positions"].at[0].set(24)
     eng.state["lengths"] = eng.state["lengths"].at[0].set(24)
     held_before = eng.kv.held(0)

@@ -178,7 +178,8 @@ def test_eviction_never_inverts_priority(tiny):
     cfg, params = tiny
     eng = make_engine(cfg, params, EngineConfig(
         slots=2, cache_len=64, n_pages=4, page_size=8, eos_token=-1,
-        kv_layout="paged", scheduler="priority", qos_classes=2))
+        kv_layout="paged", scheduler="priority", qos_classes=2,
+        decode_span=1))                     # keep hi running after step 1
     rng = np.random.default_rng(7)
     hi = Request(0, rng.integers(1, 256, size=20).astype(np.int32),
                  max_new_tokens=4, qos=0)

@@ -58,15 +58,17 @@ def test_prefix_cache_hit_is_deterministic(tiny):
 
 def test_decode_matches_unparked_sequence(tiny):
     """A parked-then-resumed sequence produces the same tokens as one that
-    was never parked (the VoQ freeze is bit-exact)."""
+    was never parked (the VoQ freeze is bit-exact). decode_span=1 pins
+    the park at an exact token position; tests/test_decode_span.py
+    covers parking mid-span."""
     cfg, params = tiny
     prompt = np.arange(1, 12, dtype=np.int32)
 
-    ref_eng = _mk(cfg, params)
+    ref_eng = _mk(cfg, params, decode_span=1)
     ref_eng.submit(Request(0, prompt, max_new_tokens=6))
     ref = ref_eng.run_until_done()[0].tokens_out
 
-    eng = _mk(cfg, params)
+    eng = _mk(cfg, params, decode_span=1)
     eng.submit(Request(0, prompt, max_new_tokens=6))
     eng.step()                # admit + 1 token
     # park it manually (simulate page pressure), then let it resume
