@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-sched bench-prefill bench-decode bench \
-	quickstart
+.PHONY: test bench-smoke bench-sched bench-prefill bench-decode \
+	bench-sample bench quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -21,6 +21,9 @@ bench-prefill:
 
 bench-decode:
 	$(PY) benchmarks/decode_throughput.py --smoke
+
+bench-sample:
+	$(PY) benchmarks/sampling_overhead.py --smoke
 
 bench:
 	$(PY) benchmarks/run.py

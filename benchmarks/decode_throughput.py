@@ -38,7 +38,9 @@ def _run_trace(cfg, params, layout: str, span: int, n_req: int,
     dt = time.perf_counter() - t0
     assert len(done) == n_req
     return {"tokens": eng.stats["decode_tokens"],
-            "host_syncs": eng.stats["host_syncs"],
+            # decode-path round-trips: host_syncs minus the one
+            # accounted first-token sync per prefill
+            "host_syncs": eng.stats["host_syncs"] - eng.stats["prefills"],
             "spans": eng.stats["decode_spans"],
             "tok_per_s": eng.stats["decode_tokens"] / dt,
             "outs": {r.req_id: tuple(r.tokens_out) for r in done}}

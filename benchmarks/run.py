@@ -20,13 +20,15 @@ def main() -> None:
     from benchmarks import (building_blocks, chunked_prefill,
                             decode_throughput, e2e, kv_scaling,
                             module_footprint, reliability, resource_miss,
-                            scheduler_qos)
+                            sampling_overhead, scheduler_qos)
     smoke = "--smoke" in sys.argv
     if smoke:
         sections = [
             ("sec3_chunked_prefill", lambda: chunked_prefill.run(smoke=True)),
             ("sec3_decode_spans",
              lambda: decode_throughput.run(smoke=True)),
+            ("sec3_sampling_overhead",
+             lambda: sampling_overhead.run(smoke=True)),
             ("fig14_e2e_prototype", e2e.run),
         ]
     else:
@@ -38,6 +40,7 @@ def main() -> None:
             ("sec4_qos_scheduler", scheduler_qos.run),
             ("sec3_chunked_prefill", chunked_prefill.run),
             ("sec3_decode_spans", decode_throughput.run),
+            ("sec3_sampling_overhead", sampling_overhead.run),
             ("sec6.1_reliability_gbn_sr", reliability.run),
             ("fig14_e2e_prototype", e2e.run),
         ]

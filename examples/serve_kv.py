@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.configs.registry import SMOKE_CONFIGS
 from repro.models import lm
-from repro.serve.api import EngineConfig, Request, make_engine
+from repro.serve.api import (EngineConfig, Request, SamplingParams,
+                             make_engine)
 
 
 def main():
@@ -29,10 +30,19 @@ def main():
     ap.add_argument("--decode-span", type=int, default=8,
                     help="decode steps fused into one jitted scan between "
                          "host syncs (1 = per-step decode)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax; > 0 "
+                         "selects the stochastic sampler)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed; streams replay from "
+                         "(seed, req_id)")
     args = ap.parse_args()
 
     cfg = SMOKE_CONFIGS["qwen3-8b"]
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    sampler = "stochastic" if args.temperature > 0 else "greedy"
     # paged layout: KV lives in a shared page pool behind per-slot page
     # tables (DESIGN.md §3); the deliberately tight page budget exercises
     # alloc-on-append growth, VoQ parking/eviction, and (with chunking)
@@ -40,8 +50,11 @@ def main():
     eng = make_engine(cfg, params, EngineConfig(
         slots=4, cache_len=128, n_pages=28, page_size=8, eos_token=-1,
         kv_layout=args.kv_layout, scheduler=args.scheduler, qos_classes=2,
-        prefill_chunk=args.prefill_chunk, decode_span=args.decode_span))
+        prefill_chunk=args.prefill_chunk, decode_span=args.decode_span,
+        sampler=sampler))
 
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed)
     rng = np.random.default_rng(0)
     base_prompt = rng.integers(1, cfg.vocab_size, size=24).astype(np.int32)
     reqs = []
@@ -50,7 +63,7 @@ def main():
         # get the lower QoS class (only matters to class-aware schedulers)
         p = base_prompt if i % 2 == 0 else rng.integers(
             1, cfg.vocab_size, size=int(rng.integers(8, 40))).astype(np.int32)
-        r = Request(i, p, max_new_tokens=10, qos=i % 2)
+        r = Request(i, p, max_new_tokens=10, qos=i % 2, sampling=sp)
         reqs.append(r)
         eng.submit(r)
 
@@ -67,7 +80,10 @@ def main():
     print("completion order (req_id:qos):",
           " ".join(f"{r.req_id}:{r.qos}" for r in done))
     same = [tuple(r.tokens_out) for r in done if r.req_id % 2 == 0]
-    print("shared-prompt outputs identical:", len(set(same)) == 1)
+    # greedy: shared prompts decode identically; stochastic: streams are
+    # keyed by (seed, req_id), so sharers diverge by design
+    print("shared-prompt outputs identical:", len(set(same)) == 1,
+          f"(sampler: {sampler})")
 
 
 if __name__ == "__main__":

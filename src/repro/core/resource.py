@@ -143,16 +143,24 @@ class PagePool:
     let a non-sequence owner (the prefix block cache) pin pages without a
     table. A page returns to the free list only when its last reference
     drops, so N sequences with a common prefix hold the prefix pages once.
+
+    ``peak`` is the pool's own high-water mark of ``n_used``: every page
+    claim funnels through `alloc`, so the peak registers even when an
+    alloc+release happens entirely inside a backend call between engine
+    observation points (the engine's ``stats["pages_peak"]`` is a mirror
+    of this value, never an independent sample).
     """
     n_pages: int
     page_size: int
     free: List[int] = field(default_factory=list)
     tables: Dict[int, List[int]] = field(default_factory=dict)
     refcnt: Dict[int, int] = field(default_factory=dict)
+    peak: int = 0
 
     def __post_init__(self):
         if not self.free:
             self.free = list(range(self.n_pages - 1, -1, -1))
+        self.peak = max(self.peak, self.n_used)
 
     @property
     def n_free(self) -> int:
@@ -172,6 +180,7 @@ class PagePool:
         for p in pages:
             self.refcnt[p] = 1
         self.tables.setdefault(seq_id, []).extend(pages)
+        self.peak = max(self.peak, self.n_used)
         return pages
 
     def share(self, seq_id: int, pages: List[int]) -> None:

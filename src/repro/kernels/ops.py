@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import (flash_attention as _fa, linear_scan as _ls,
                            moe_dispatch as _md, paged_attention as _pd,
-                           wkv6 as _wkv)
+                           sampling as _sp, wkv6 as _wkv)
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -38,6 +38,11 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
     return _pd.paged_decode_attention(q, k_pages, v_pages, page_table,
                                       lengths, backend="pallas",
                                       interpret=_auto_interpret(interpret))
+
+
+@jax.jit
+def sample_logits(logits, keys, temperature, top_k, top_p):
+    return _sp.sample_logits(logits, keys, temperature, top_k, top_p)
 
 
 @partial(jax.jit, static_argnames=("n_experts", "capacity", "interpret"))

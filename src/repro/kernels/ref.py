@@ -90,3 +90,39 @@ def wkv6_ref(r, k, v, logw, u, state0):
     xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
     S_last, ys = jax.lax.scan(step, state0, xs)
     return ys.transpose(1, 0, 2, 3), S_last
+
+
+def sample_logits_ref(logits, keys, temperature, top_k, top_p):
+    """Naive per-row sampling reference: each filter applied as its own
+    separate step (scale, top-k cut, top-p nucleus over the renormalized
+    top-k distribution), then the same categorical draw the fused kernel
+    uses on the surviving logits in vocab order.
+    logits: [B,V]; keys: [B,2] uint32; params: [B]. Returns [B] int32.
+    """
+    import numpy as np
+    lg = np.asarray(logits, np.float32)
+    B, V = lg.shape
+    out = []
+    for b in range(B):
+        t = float(temperature[b])
+        if t <= 0.0:
+            out.append(int(np.argmax(lg[b])))
+            continue
+        scaled = jnp.asarray(lg[b] / np.float32(max(t, 1e-6)))
+        order = np.argsort(-np.asarray(scaled), kind="stable")
+        keep = np.zeros(V, bool)
+        k = int(top_k[b])
+        keep[order[:k if 0 < k < V else V]] = True
+        p = float(top_p[b])
+        if p < 1.0:
+            # nucleus over the renormalized kept distribution: drop
+            # entries whose preceding kept mass already reaches p
+            probs = jax.nn.softmax(jnp.where(jnp.asarray(keep[order]),
+                                             scaled[order], -jnp.inf))
+            cum = np.asarray(jnp.cumsum(probs))
+            probs = np.asarray(probs)
+            keep[order] &= (cum - probs) < p
+            keep[order[0]] = True
+        masked = jnp.where(jnp.asarray(keep), scaled, -jnp.inf)
+        out.append(int(jax.random.categorical(keys[b], masked)))
+    return jnp.asarray(out, jnp.int32)

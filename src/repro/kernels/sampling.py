@@ -1,0 +1,103 @@
+"""Fused on-device token sampling: temperature -> top-k -> top-p -> draw.
+
+The serving engine's token selection is a per-token, per-slot network
+function riding the decode fast path (DESIGN.md §3.7) — sPIN's handler
+argument: per-message compute must be a swappable handler inside the
+pipeline, not a host round-trip. Everything here is jittable jnp so the
+whole selection runs inside the decode span's ``lax.scan`` (and inside
+the prefill first-token selector); the host only ever sees the chosen
+token ids.
+
+Filter semantics (per batch row, all params per-slot arrays):
+
+  1. temperature: ``logits / max(t, eps)``; ``t <= 0`` short-circuits the
+     row to ``jnp.argmax`` of the *raw* logits — byte-identical greedy.
+  2. top-k: keep the ``k`` largest entries (``k <= 0`` or ``k >= V``
+     disables the filter).
+  3. top-p: over the top-k-renormalized distribution, keep the smallest
+     sorted prefix whose mass reaches ``p`` (``p >= 1`` disables; the
+     best entry is always kept).
+  4. draw: ``jax.random.categorical`` over the masked logits *in
+     original vocab order* with a per-slot key.
+
+One descending sort serves both filters; the keep mask is scattered
+back to vocab order, so with ``k = V`` and ``p = 1`` the masked logits
+equal the scaled logits bit-for-bit and the draw is exactly pure
+temperature sampling (pinned by tests/test_sampling.py).
+
+PRNG discipline: `derive_keys` makes a slot's key a pure function of
+``(seed, req_id, token_index)`` — never of batch slot, span bucket, or
+wall clock — so a stream replays identically through batching changes,
+span shrinks, park/unpark and preempt-restart (DESIGN.md §3.7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def derive_keys(seeds, req_ids, indices):
+    """Per-slot threefry keys from ``(seed, req_id, token_index)``.
+
+    seeds/req_ids/indices: [B] int32. Returns [B, 2] uint32 keys. The
+    index is the token's position in the request's *emitted stream*
+    (prefill first token = 0), so replay from any restore point
+    re-derives exactly the keys the undisturbed run would use.
+    """
+    def one(seed, rid, idx):
+        key = jax.random.PRNGKey(seed)
+        key = jax.random.fold_in(key, rid)
+        return jax.random.fold_in(key, idx)
+
+    return jax.vmap(one)(seeds, req_ids, indices)
+
+
+def sample_logits(logits, keys, temperature, top_k, top_p):
+    """Fused temperature -> top-k -> top-p -> categorical draw.
+
+    logits: [B, V] (any float); keys: [B, 2] uint32 (from `derive_keys`);
+    temperature/top_p: [B] float; top_k: [B] int. Returns [B] int32.
+    Rows with ``temperature <= 0`` return ``jnp.argmax(logits)``.
+    """
+    B, V = logits.shape
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperature.astype(jnp.float32), 1e-6)[:, None]
+    scaled = lg / t
+
+    # one descending sort serves both filters (stable: ties keep vocab
+    # order, matching the naive per-step reference)
+    order = jnp.argsort(-scaled, axis=-1)
+    sorted_ = jnp.take_along_axis(scaled, order, axis=-1)
+    pos = jnp.arange(V)[None, :]
+    k = jnp.where((top_k <= 0) | (top_k >= V), V, top_k)[:, None]
+    keep_k = pos < k
+
+    # top-p over the top-k-renormalized mass: drop entries whose
+    # *preceding* kept mass already reaches p (the first entry has
+    # preceding mass 0 and always survives)
+    probs = jax.nn.softmax(jnp.where(keep_k, sorted_, -jnp.inf), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep_p = ((cum - probs) < top_p[:, None]) | (top_p[:, None] >= 1.0)
+    keep = keep_k & keep_p
+    keep = keep.at[:, 0].set(True)
+
+    # scatter the mask back to vocab order: with both filters disabled
+    # the masked logits ARE the scaled logits (exact, not renormalized),
+    # so the degenerate case equals pure temperature sampling
+    rows = jnp.arange(B)[:, None]
+    keep_vocab = jnp.zeros((B, V), bool).at[rows, order].set(keep)
+    masked = jnp.where(keep_vocab, scaled, -jnp.inf)
+    drawn = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, drawn)
+
+
+def token_logprob(logits, tokens):
+    """Log-probability of each chosen token under the *raw* logits.
+
+    logits: [B, V]; tokens: [B] int32 -> [B] float32. Raw (pre-filter)
+    log-softmax: the conventional logprob surface, independent of the
+    sampler that picked the token.
+    """
+    lsm = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(lsm, tokens[:, None], axis=-1)[:, 0]

@@ -15,8 +15,8 @@ import numpy as np
 
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.models import lm
-from repro.serve.api import (EngineConfig, Request, default_page_budget,
-                             make_engine)
+from repro.serve.api import (EngineConfig, Request, SamplingParams,
+                             default_page_budget, make_engine)
 
 
 def main():
@@ -48,12 +48,27 @@ def main():
     ap.add_argument("--decode-span", type=int, default=8,
                     help="decode steps fused into one jitted scan between "
                          "host syncs (1 = per-step decode)")
+    ap.add_argument("--sampler", default=None,
+                    help="Sampler name (greedy | stochastic | any "
+                         "registered third-party name); default greedy, "
+                         "or stochastic when --temperature > 0")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = exact greedy argmax")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k best logits (0 = full vocab)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass to keep (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed; streams replay from "
+                         "(seed, req_id) regardless of batching")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     n_pages = args.n_pages or default_page_budget(
         args.slots, args.cache_len, args.page_size)
+    sampler = args.sampler or (
+        "stochastic" if args.temperature > 0 else "greedy")
     eng = make_engine(cfg, params, EngineConfig(
         slots=args.slots, cache_len=args.cache_len,
         n_pages=n_pages, page_size=args.page_size,
@@ -61,13 +76,16 @@ def main():
         qos_classes=args.qos_classes, eos_token=-1,
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
-        decode_span=args.decode_span))
+        decode_span=args.decode_span, sampler=sampler))
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(i, rng.integers(
             1, cfg.vocab_size,
             size=int(rng.integers(8, 48))).astype(np.int32),
-            max_new_tokens=args.max_new, qos=i % args.qos_classes))
+            max_new_tokens=args.max_new, qos=i % args.qos_classes,
+            sampling=sp))
     t0 = time.perf_counter()
     done = eng.run_until_done()
     dt = time.perf_counter() - t0
@@ -75,7 +93,7 @@ def main():
           f"({eng.stats['decode_tokens'] / dt:.1f} decode tok/s, "
           f"{eng.stats['host_syncs']} host syncs)  "
           f"[{args.kv_layout} kv, {args.scheduler} scheduler, "
-          f"{n_pages} pages, span {args.decode_span}]")
+          f"{sampler} sampler, {n_pages} pages, span {args.decode_span}]")
     print("completion order (req_id:qos):",
           " ".join(f"{r.req_id}:{r.qos}" for r in done))
     print("stats:", eng.stats)

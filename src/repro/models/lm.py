@@ -31,6 +31,7 @@ def shard_map(f, mesh, in_specs, out_specs, check_rep=False):
                       **{_SM_REP_KWARG: check_rep})
 
 from repro.configs.base import ModelConfig
+from repro.kernels import sampling as ksamp
 from repro.models import transformer as tf
 from repro.models.layers import rms_norm
 from repro.sharding.policy import Policy
@@ -314,7 +315,8 @@ def decode_step(params, tokens, state, cfg: ModelConfig, policy: Policy,
 
 def decode_span(params, tokens, state, cfg: ModelConfig, policy: Policy,
                 active, budgets, *, span: int, eos_token: int,
-                cache_len: int):
+                cache_len: int, sample_fn=None, sampler_params=None,
+                rng=None, want_logprobs: bool = False):
     """Run up to ``span`` decode steps inside one jitted ``lax.scan``.
 
     The serving engine's per-token host round-trip (dispatch, argmax
@@ -334,25 +336,70 @@ def decode_span(params, tokens, state, cfg: ModelConfig, policy: Policy,
     as it emits ``eos_token``, exhausts its budget, or fills
     ``cache_len``; the rest of the batch keeps decoding.
 
-    Returns (toks [span, B] int32, emit [span, B] bool, state): emit[t,i]
-    marks a real emission at scan step t, so the host-applied token
-    streams are byte-identical to per-step decode (span == 1 is exactly
-    ``decode_step``).
+    Token selection is pluggable (DESIGN.md §3.7): ``sample_fn(logits,
+    keys, sampler_params)`` runs on device each scan step (None =
+    argmax). With ``rng = (seeds [B], req_ids [B], counters [B])`` the
+    carry threads a per-slot emitted-token counter: step keys are
+    ``derive_keys(seed, req_id, counter)`` and the counter advances
+    only on real emissions, so a slot's key sequence depends solely on
+    its ``(seed, req_id)`` stream position — invariant to span length,
+    span bucketing, batch neighbors, and park/unpark (the engine
+    re-derives counters from host bookkeeping, exactly like KV state).
+
+    Returns (toks [span, B] int32, emit [span, B] bool, state) — with
+    ``want_logprobs`` (toks, emit, logprobs [span, B] f32, state), the
+    chosen tokens' raw-logit logprobs riding the same host sync.
+    emit[t,i] marks a real emission at scan step t, so the
+    host-applied token streams are byte-identical to per-step decode
+    (span == 1 is exactly ``decode_step``).
     """
+    if rng is not None:
+        seeds, req_ids, counters = rng
+    else:
+        counters = jnp.zeros_like(budgets)
+
     def body(carry, _):
-        toks, st, act, left = carry
+        toks, st, act, left, ctr = carry
         logits, st = decode_step(params, toks, st, cfg, policy, active=act)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if sample_fn is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            keys = (ksamp.derive_keys(seeds, req_ids, ctr)
+                    if rng is not None else None)
+            nxt = sample_fn(logits, keys, sampler_params).astype(jnp.int32)
         nxt = jnp.where(act, nxt, toks)
+        out = (nxt, act)
+        if want_logprobs:
+            out = out + (ksamp.token_logprob(logits, nxt),)
         left = left - act.astype(jnp.int32)
+        ctr = ctr + act.astype(jnp.int32)
         done = ((nxt == jnp.int32(eos_token)) | (left <= 0)
                 | (st["positions"] >= cache_len))
-        return (nxt, st, act & ~done, left), (nxt, act)
+        return (nxt, st, act & ~done, left, ctr), out
 
-    carry = (tokens, state, active, budgets)
-    (_, state, _, _), (toks, emit) = jax.lax.scan(body, carry, None,
-                                                  length=span)
+    carry = (tokens, state, active, budgets, counters)
+    (_, state, _, _, _), outs = jax.lax.scan(body, carry, None, length=span)
+    if want_logprobs:
+        toks, emit, lps = outs
+        return toks, emit, lps, state
+    toks, emit = outs
     return toks, emit, state
+
+
+def select_token(logits, sample_fn=None, sampler_params=None, rng=None):
+    """On-device token selection for a batch of final logits — the
+    prefill first-token path (DESIGN.md §3.7). Same sampler contract as
+    ``decode_span``; ``rng = (seeds, req_ids, indices)`` with index 0
+    for a prefill token. Returns (tokens [B] int32, logprobs [B] f32):
+    one fused computation, so the host's only cost is a single scalar
+    sync instead of an eager argmax chain.
+    """
+    keys = ksamp.derive_keys(*rng) if rng is not None else None
+    if sample_fn is None:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        tok = sample_fn(logits, keys, sampler_params).astype(jnp.int32)
+    return tok, ksamp.token_logprob(logits, tok)
 
 
 def init_serve_state(cfg: ModelConfig, batch: int, cache_len: int,

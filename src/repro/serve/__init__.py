@@ -1,6 +1,7 @@
 from repro.serve.api import (EngineConfig, KVBackend, ParkingTransport,  # noqa
-                             ParkMeta, Request, Scheduler,
-                             default_page_budget, make_engine,
-                             make_kv_backend, make_scheduler,
-                             register_kv_backend, register_scheduler)
+                             ParkMeta, Request, Sampler, SamplingParams,
+                             Scheduler, default_page_budget, make_engine,
+                             make_kv_backend, make_sampler, make_scheduler,
+                             register_kv_backend, register_sampler,
+                             register_scheduler)
 from repro.serve.engine import ServingEngine  # noqa

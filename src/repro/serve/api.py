@@ -4,7 +4,7 @@ JingZhao's pitch is a fixed frame with swappable subsystems: prototype the
 Queue / Resource / Transport machinery once, then drop new network
 functions into stable interfaces. This module is that frame for the
 serving engine. `ServingEngine` (serve/engine.py) is a thin driver over
-three protocols, each the serving analogue of a paper subsystem:
+four protocols, each the serving analogue of a paper subsystem:
 
   Scheduler        <- Queue Subsystem   (doorbell -> WQE dispatch, QoS
                       classes over a real N-queue HostMultiQueue)
@@ -12,13 +12,17 @@ three protocols, each the serving analogue of a paper subsystem:
                       memory layout: dense slabs or the paged pool)
   ParkingTransport <- Transport Subsystem (host-tier park/restore moves
                       with BusModel timing, the VoQ overflow path)
+  Sampler          <- a Semantics-tier handler (sPIN's model): per-token
+                      selection runs ON DEVICE inside the decode span,
+                      swappable without forking the pipeline (§3.7)
 
 Implementations register by name (`register_scheduler`,
-`register_kv_backend`) so launchers, benchmarks, and third-party code
-select parts with a string — adding a scheduling policy or KV layout is
-a plug-in, not an engine edit. serve/schedulers.py, serve/kv_backends.py
-and serve/parking.py hold the built-ins; `make_engine` wires a full
-engine from an `EngineConfig`.
+`register_kv_backend`, `register_sampler`) so launchers, benchmarks, and
+third-party code select parts with a string — adding a scheduling
+policy, KV layout, or sampling strategy is a plug-in, not an engine
+edit. serve/schedulers.py, serve/kv_backends.py, serve/samplers.py and
+serve/parking.py hold the built-ins; `make_engine` wires a full engine
+from an `EngineConfig`.
 """
 from __future__ import annotations
 
@@ -32,6 +36,29 @@ from repro.core.resource import BusModel
 
 
 @dataclass
+class SamplingParams:
+    """Per-request token-selection parameters (DESIGN.md §3.7).
+
+    The defaults are exact greedy: `temperature <= 0` short-circuits to
+    argmax of the raw logits, byte-identical to the pre-sampler engine.
+    `top_k <= 0` and `top_p >= 1` disable their filters. `seed` is the
+    replayable stream identity (folded into the key modulo 2^32): a
+    request's KEY stream is a pure function of `(seed, req_id)` and its
+    position in the emitted stream — independent of batching, span
+    bucketing, prefill chunking, and park/unpark timing — so the token
+    stream replays exactly wherever the logits are bit-equal (always
+    true for batching/span/park variation; chunked vs monolithic
+    prefill is logit-equal only to the 1e-4 pinned tolerance, so a draw
+    sitting exactly on a categorical boundary could in principle flip).
+    """
+    temperature: float = 0.0
+    top_k: int = 0                # 0 = full vocab
+    top_p: float = 1.0
+    seed: int = 0
+    logprobs: bool = False        # record chosen-token logprobs
+
+
+@dataclass
 class Request:
     req_id: int
     prompt: np.ndarray
@@ -40,6 +67,8 @@ class Request:
     arrived_at: float = 0.0
     tokens_out: List[int] = field(default_factory=list)
     finished_at: Optional[float] = None
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    logprobs_out: List[float] = field(default_factory=list)
 
 
 @dataclass
@@ -60,6 +89,7 @@ class EngineConfig:
     host_offload: bool = True     # VoQ overflow tier
     kv_layout: str = "dense"      # KVBackend name: "dense" | "paged"
     scheduler: str = "fcfs"       # Scheduler name: "fcfs" | "priority" | ...
+    sampler: str = "greedy"       # Sampler name: "greedy" | "stochastic"
     qos_classes: int = 4          # queues a multi-class scheduler exposes
     queue_capacity: int = 1 << 12
     bus: BusModel = field(default_factory=BusModel)
@@ -144,6 +174,29 @@ class KVBackend(Protocol):
 
 
 @runtime_checkable
+class Sampler(Protocol):
+    """Sampling Subsystem: on-device token selection (DESIGN.md §3.7).
+
+    `sample(logits [B,V], keys [B,2] | None, params)` picks one token
+    per row and MUST be jax-traceable with no host state: the engine
+    calls it inside the jitted decode span and the jitted prefill
+    first-token selector, so a sampler can never add host syncs to the
+    fast path. `slot_params(req)` extracts the per-request parameters
+    as a fixed-arity tuple of numpy scalars (constant dtypes; `req is
+    None` must yield defaults for empty slots) — the engine stacks them
+    into per-slot arrays and passes them through as `params`. When
+    `needs_rng` is set, `keys` are per-slot threefry keys derived from
+    `(seed, req_id, token_index)` (kernels/sampling.derive_keys), so
+    sampled streams replay deterministically through batching, span
+    bucketing, park/unpark and preempt-restart.
+    """
+    needs_rng: bool
+
+    def slot_params(self, req: Optional[Request]) -> Tuple[Any, ...]: ...
+    def sample(self, logits, keys, params): ...
+
+
+@runtime_checkable
 class ParkingTransport(Protocol):
     """Transport Subsystem: the host-tier move/restore channel.
 
@@ -168,6 +221,7 @@ class ParkingTransport(Protocol):
 
 SCHEDULERS: Dict[str, Type] = {}
 KV_BACKENDS: Dict[str, Type] = {}
+SAMPLERS: Dict[str, Type] = {}
 
 
 def register_scheduler(name: str) -> Callable[[Type], Type]:
@@ -182,6 +236,14 @@ def register_kv_backend(name: str) -> Callable[[Type], Type]:
     def deco(cls: Type) -> Type:
         cls.name = name
         KV_BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def register_sampler(name: str) -> Callable[[Type], Type]:
+    def deco(cls: Type) -> Type:
+        cls.name = name
+        SAMPLERS[name] = cls
         return cls
     return deco
 
@@ -203,10 +265,19 @@ def make_kv_backend(name: str, cfg, ecfg: EngineConfig) -> KVBackend:
     return KV_BACKENDS[name](cfg, ecfg)
 
 
+def make_sampler(name: str) -> Sampler:
+    from repro.serve import samplers  # noqa: F401  (registers built-ins)
+    if name not in SAMPLERS:
+        raise ValueError(f"unknown sampler {name!r}; "
+                         f"registered: {sorted(SAMPLERS)}")
+    return SAMPLERS[name]()
+
+
 def make_engine(cfg, params, ecfg: EngineConfig, policy=None,
                 scheduler: Optional[Scheduler] = None,
                 kv_backend: Optional[KVBackend] = None,
-                transport: Optional[ParkingTransport] = None):
+                transport: Optional[ParkingTransport] = None,
+                sampler: Optional[Sampler] = None):
     """Build a ServingEngine with parts resolved by name from `ecfg`
     (or injected directly for third-party subsystems)."""
     from repro.serve.engine import ServingEngine
@@ -214,7 +285,7 @@ def make_engine(cfg, params, ecfg: EngineConfig, policy=None,
     return ServingEngine(cfg, params, ecfg,
                          policy=policy if policy is not None else NULL_POLICY,
                          scheduler=scheduler, kv_backend=kv_backend,
-                         transport=transport)
+                         transport=transport, sampler=sampler)
 
 
 def default_page_budget(slots: int, cache_len: int, page_size: int,

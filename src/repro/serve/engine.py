@@ -12,6 +12,8 @@ behind protocols and are selected by name through `EngineConfig`:
                    (serve/kv_backends.py)
   ParkingTransport (Transport Subsystem)-> host-tier VoQ overflow moves,
                    bus-timed (serve/parking.py)
+  Sampler          (per-token handler)  -> on-device token selection:
+                   greedy | stochastic (serve/samplers.py, §3.7)
 
 The engine loop itself is layout- and policy-free: admit from the
 scheduler, restore due unparks, stream one chunk of each PREFILLING
@@ -46,8 +48,8 @@ from repro.configs.base import ModelConfig
 from repro.models import lm
 from repro.models import transformer as tf
 from repro.serve.api import (EngineConfig, KVBackend, ParkingTransport,
-                             Request, Scheduler, make_kv_backend,
-                             make_scheduler)
+                             Request, Sampler, Scheduler, make_kv_backend,
+                             make_sampler, make_scheduler)
 # Re-exports: the public request/config types live in serve/api.py and the
 # slot helpers in serve/kv_backends.py; older call sites import them here.
 from repro.serve.kv_backends import (_slot_extract, _slot_insert,  # noqa: F401
@@ -58,12 +60,18 @@ from repro.serve.prefix_cache import PrefixCache
 from repro.sharding.policy import NULL_POLICY, Policy
 
 
+def _wrap_i32(v: int) -> np.int32:
+    """Wrap an arbitrary Python int into int32 (two's complement)."""
+    return np.uint32(int(v) & 0xFFFFFFFF).astype(np.int32)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  policy: Policy = NULL_POLICY,
                  scheduler: Optional[Scheduler] = None,
                  kv_backend: Optional[KVBackend] = None,
-                 transport: Optional[ParkingTransport] = None):
+                 transport: Optional[ParkingTransport] = None,
+                 sampler: Optional[Sampler] = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -83,6 +91,8 @@ class ServingEngine:
             ecfg.scheduler, n_classes=ecfg.qos_classes,
             capacity=ecfg.queue_capacity)
         self.transport = transport or HostParkingTransport(ecfg.bus)
+        self.sampler = sampler or make_sampler(ecfg.sampler)
+        self._needs_rng = bool(getattr(self.sampler, "needs_rng", False))
         self.active = np.zeros(B, bool)          # slot has a sequence
         self.running = np.zeros(B, bool)         # decoding (not parked,
         #                                          not mid-prefill)
@@ -111,13 +121,16 @@ class ServingEngine:
 
         # one compiled scan per executed span length; lengths are pow2-
         # bucketed (capped at decode_span) so shrunken spans cost at most
-        # log2(decode_span) extra compiles
+        # log2(decode_span) extra compiles (×2 when logprobs are on)
         self._span_fns: dict = {}
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, t, cfg, policy, cache_len=L))
         self._prefill_chunk = jax.jit(
             lambda p, t, c, s, nv: lm.prefill_chunk(p, t, c, s, nv, cfg,
                                                     policy))
+        self._select_fn = jax.jit(
+            lambda lg, sp, rng: lm.select_token(
+                lg, self.sampler.sample, sp, rng))
 
     @property
     def pool(self):
@@ -126,6 +139,47 @@ class ServingEngine:
 
     def _streaming(self) -> bool:
         return bool(self.ecfg.prefill_chunk) and self._chunked_ok
+
+    def _host_sync(self, tree):
+        """THE accounted blocking device->host transfer. Every read the
+        serving loop makes off the device — one per decode span, one per
+        prefill first token — funnels through here so
+        ``stats["host_syncs"]`` is the true round-trip count."""
+        self.stats["host_syncs"] += 1
+        return jax.device_get(tree)
+
+    # -- sampler inputs (DESIGN.md §3.7) ----------------------------------
+    def _sampler_params(self, reqs: List[Optional[Request]]):
+        """Stack per-request sampling parameters into per-slot arrays
+        (a tuple of [len(reqs)] arrays; () for parameterless samplers)."""
+        per = [self.sampler.slot_params(r) for r in reqs]
+        if not per[0]:
+            return ()
+        return tuple(jnp.asarray(np.asarray([p[j] for p in per]))
+                     for j in range(len(per[0])))
+
+    def _sampler_rng(self, reqs: List[Optional[Request]]):
+        """(seeds, req_ids, counters) for `derive_keys` — or None for
+        RNG-free samplers. The counter is the request's emitted-token
+        count from *host bookkeeping*, so a restored (unparked or
+        preempt-restarted) request resumes its key stream exactly where
+        the undisturbed run would be: PRNG state is re-derived the same
+        way KV state is restored, never re-seeded from scratch."""
+        if not self._needs_rng:
+            return None
+        n = len(reqs)
+        seeds = np.zeros(n, np.int32)
+        rids = np.zeros(n, np.int32)
+        ctrs = np.zeros(n, np.int32)
+        for i, r in enumerate(reqs):
+            if r is not None:
+                # seeds/req_ids fold into the key modulo 2^32: wrap here
+                # instead of letting numpy raise on out-of-int32 values
+                # (hash-derived seeds routinely exceed 2^31)
+                seeds[i] = _wrap_i32(r.sampling.seed)
+                rids[i] = _wrap_i32(r.req_id)
+                ctrs[i] = len(r.tokens_out)
+        return (jnp.asarray(seeds), jnp.asarray(rids), jnp.asarray(ctrs))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -209,8 +263,6 @@ class ServingEngine:
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_tokens_reused"] += matched
             self.stats["prefills"] += 1
-            self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                           self.pool.n_used)
             if not streaming:
                 if matched:
                     # cached prefix installed: compute only the tail,
@@ -228,7 +280,17 @@ class ServingEngine:
         self.state = self.kv.prefill_into_slot(
             self.state, slot, req.req_id, st["caches"], len(prompt))
         self.stats["prefill_tokens"] += len(prompt)
-        self._finish_prefill(slot, req, int(jnp.argmax(logits[0])))
+        self._finish_prefill(slot, req, *self._first_token(req, logits))
+
+    def _first_token(self, req: Request, logits):
+        """Select a finished prefill's first token ON DEVICE through the
+        sampler (index 0 of the request's key stream) and sync exactly
+        one accounted (token, logprob) scalar pair — not an eager argmax
+        dispatch chain with an unaccounted blocking read."""
+        sp = self._sampler_params([req])
+        tok, lp = self._host_sync(
+            self._select_fn(logits, sp, self._sampler_rng([req])))
+        return int(tok[0]), float(lp[0])
 
     # -- chunked prefill (DESIGN.md §3.4) ---------------------------------
     def _prefill_step(self):
@@ -286,13 +348,12 @@ class ServingEngine:
         self.prefill_pos[slot] = pos + n_valid
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_tokens"] += n_valid
-        self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                       self.pool.n_used)
         if last:
-            self._finish_prefill(slot, req, int(jnp.argmax(logits[0])))
+            self._finish_prefill(slot, req, *self._first_token(req, logits))
         return n_valid
 
-    def _finish_prefill(self, slot: int, req: Request, first_tok: int):
+    def _finish_prefill(self, slot: int, req: Request, first_tok: int,
+                        first_lp: float = 0.0):
         total = len(req.prompt)
         self.state["lengths"] = self.state["lengths"].at[slot].set(total)
         self.state["positions"] = self.state["positions"].at[slot].set(total)
@@ -300,8 +361,8 @@ class ServingEngine:
         self.prefill_pos[slot] = total
         self._donate_prefix(slot, req)
         req.tokens_out.append(first_tok)
-        self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                       self.pool.n_used)
+        if req.sampling.logprobs:
+            req.logprobs_out.append(first_lp)
         # the prefill token can already satisfy the contract: never run
         # (or append) a decode token past max_new_tokens or EOS
         if (len(req.tokens_out) >= req.max_new_tokens
@@ -421,8 +482,6 @@ class ServingEngine:
             self.running[meta.slot] = True
             self.transport.complete(req_id)
             self.stats["unparked"] += 1
-            self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                           self.pool.n_used)
 
     # -- capacity growth ---------------------------------------------------
     def _grow(self):
@@ -478,8 +537,6 @@ class ServingEngine:
                 self._preempt_restart(i)           # avoid whole-batch stall
         if changed:
             self.kv.mark_dirty()
-            self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                           self.pool.n_used)
 
     def _preempt_restart(self, slot: int):
         """Release a slot's pages and requeue its request from scratch
@@ -490,21 +547,26 @@ class ServingEngine:
         self.kv.release(req.req_id)
         self._stalled.discard(req.req_id)
         req.tokens_out.clear()
+        req.logprobs_out.clear()
         self._release_slot(slot)
         self._requeue(req)
         self.stats["preempt_restarts"] += 1
 
     # -- decode spans (DESIGN.md §3.6) -------------------------------------
-    def _span_fn(self, span: int):
-        """The jitted fused-decode scan for one executed span length."""
-        fn = self._span_fns.get(span)
+    def _span_fn(self, span: int, want_lp: bool):
+        """The jitted fused-decode scan for one executed span length,
+        with the engine's sampler closed over as the per-step selection
+        handler (DESIGN.md §3.7)."""
+        fn = self._span_fns.get((span, want_lp))
         if fn is None:
             cfg, policy = self.cfg, self.policy
             eos, L = self.ecfg.eos_token, self.ecfg.cache_len
-            fn = jax.jit(lambda p, t, s, a, b: lm.decode_span(
+            sample = self.sampler.sample
+            fn = jax.jit(lambda p, t, s, a, b, sp, rng: lm.decode_span(
                 p, t, s, cfg, policy, a, b, span=span, eos_token=eos,
-                cache_len=L))
-            self._span_fns[span] = fn
+                cache_len=L, sample_fn=sample, sampler_params=sp,
+                rng=rng, want_logprobs=want_lp))
+            self._span_fns[(span, want_lp)] = fn
         return fn
 
     @staticmethod
@@ -567,8 +629,6 @@ class ServingEngine:
             budgets[i] = want
         if grew:
             self.kv.mark_dirty()             # headroom pages joined tables
-            self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                           self.pool.n_used)
         # one bucketing rule for both compile caps: span lengths and the
         # paged table width share live_table_width's pow2-with-cap shape
         span_exec = live_table_width(int(budgets.max()), span)
@@ -576,6 +636,16 @@ class ServingEngine:
 
     # -- main loop ---------------------------------------------------------
     def step(self):
+        try:
+            self._step()
+        finally:
+            # the stat is a MIRROR of the pool's own high-water mark:
+            # allocation paths internal to backends (unpark re-allocs,
+            # third-party subsystems driving the pool directly) register
+            # in PagePool.alloc, where every page claim funnels
+            self.stats["pages_peak"] = self.pool.peak
+
+    def _step(self):
         self._admit()
         self._try_unpark()
         self._prefill_step()
@@ -595,22 +665,34 @@ class ServingEngine:
         for i, req in enumerate(self.slot_req):
             if req is not None and req.tokens_out:
                 tokens[i] = req.tokens_out[-1]
-        toks, emit, self.state = self._span_fn(span_exec)(
+        want_lp = any(r is not None and r.sampling.logprobs
+                      for r in self.slot_req)
+        out = self._span_fn(span_exec, want_lp)(
             self.params, jnp.asarray(tokens), self.state,
-            jnp.asarray(act), jnp.asarray(budgets))
+            jnp.asarray(act), jnp.asarray(budgets),
+            self._sampler_params(self.slot_req),
+            self._sampler_rng(self.slot_req))
+        if want_lp:
+            toks, emit, lps, self.state = out
+        else:
+            (toks, emit, self.state), lps = out, None
         self.stats["decode_steps"] += span_exec
         self.stats["decode_spans"] += 1
         # ONE blocking device->host sync per span — the stacked emissions
-        # and their per-step mask; positions are rederived from host
-        # bookkeeping (_slot_pos), not transferred
-        self.stats["host_syncs"] += 1
-        toks, emit = jax.device_get((toks, emit))
+        # and their per-step mask (and, when requested, logprobs);
+        # positions are rederived from host bookkeeping (_slot_pos),
+        # not transferred
+        got = self._host_sync((toks, emit) if lps is None
+                              else (toks, emit, lps))
+        toks, emit, lps = got if lps is not None else (*got, None)
         for i in range(self.ecfg.slots):
             req = self.slot_req[i]
             if req is None or not act[i]:
                 continue
             new = toks[emit[:, i], i]        # slot i's emissions, in order
             req.tokens_out.extend(int(t) for t in new)
+            if lps is not None and req.sampling.logprobs:
+                req.logprobs_out.extend(float(x) for x in lps[emit[:, i], i])
             self.stats["decode_tokens"] += len(new)
             done = (len(req.tokens_out) >= req.max_new_tokens
                     or (len(new) and int(new[-1]) == self.ecfg.eos_token)
@@ -631,6 +713,7 @@ class ServingEngine:
         for _ in range(max_steps):
             if (not self.active.any() and self.sched.pending == 0
                     and self.transport.in_flight == 0):
+                self.stats["pages_peak"] = self.pool.peak
                 return self.completed
             self.step()
         if (not self.active.any() and self.sched.pending == 0

@@ -1,0 +1,51 @@
+"""Built-in Sampler implementations (token-selection subsystem,
+DESIGN.md §3.7).
+
+Both samplers are pure jnp handlers the engine jits into the decode
+span and the prefill first-token selector — token selection never adds
+a host sync. `greedy` is exactly the pre-sampler argmax; `stochastic`
+is the fused temperature -> top-k -> top-p -> categorical kernel
+(kernels/sampling.py), whose `temperature <= 0` rows degrade
+byte-identically to greedy, so mixed batches cost one code path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import sampling as ks
+from repro.serve.api import Request, SamplingParams, register_sampler
+
+_DEFAULTS = SamplingParams()
+
+
+@register_sampler("greedy")
+class GreedySampler:
+    """argmax of the raw logits — no RNG, no per-request parameters."""
+
+    needs_rng = False
+
+    def slot_params(self, req: Optional[Request]) -> Tuple:
+        return ()
+
+    def sample(self, logits, keys, params):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@register_sampler("stochastic")
+class StochasticSampler:
+    """Per-slot temperature / top-k / top-p sampling with replayable
+    `(seed, req_id, token_index)` keys (kernels/sampling.derive_keys)."""
+
+    needs_rng = True
+
+    def slot_params(self, req: Optional[Request]) -> Tuple:
+        sp = req.sampling if req is not None else _DEFAULTS
+        return (np.float32(sp.temperature), np.int32(sp.top_k),
+                np.float32(sp.top_p))
+
+    def sample(self, logits, keys, params):
+        temperature, top_k, top_p = params
+        return ks.sample_logits(logits, keys, temperature, top_k, top_p)

@@ -116,6 +116,41 @@ def test_paged_engine_parks_under_pressure(tiny):
     assert eng.stats["pages_peak"] <= 12         # budget honored
 
 
+def test_pages_peak_tracks_backend_internal_allocs(tiny):
+    """`stats["pages_peak"]` mirrors PagePool.peak, the pool's OWN
+    high-water mark: an alloc that spikes and reclaims entirely between
+    engine observation points (here a third-party-style share_prefix +
+    alloc-on-append + release against the backend directly) must still
+    register. The old engine-side re-sampling under-reports this."""
+    cfg, params = tiny
+    ps = 8
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, cache_len=96, n_pages=32, page_size=ps, eos_token=-1,
+        kv_layout="paged"))
+    # 2 full donated blocks + 1 tail token (the cache's leave-one-token
+    # rule would otherwise hold back the last block)
+    prompt = np.arange(1, 18, dtype=np.int32)
+    eng.submit(Request(0, prompt.copy(), max_new_tokens=4))
+    eng.run_until_done()
+    engine_peak = eng.stats["pages_peak"]
+
+    # backend-internal traffic the engine loop never samples: join the
+    # cached prefix by reference, grow well past the engine-run peak,
+    # then reclaim before the engine looks again
+    matched, payloads = eng.prefix.match(prompt)
+    assert matched == 16
+    eng.state = eng.kv.share_prefix(eng.state, 0, 777, payloads, matched)
+    assert eng.kv.append(777, matched + 10 * ps)  # +10 fresh pages
+    true_peak = eng.pool.n_used
+    assert true_peak > engine_peak
+    eng.kv.release(777)                           # spike fully reclaimed
+    assert eng.pool.n_used < true_peak
+
+    eng.step()                                    # idle refresh of the mirror
+    assert eng.pool.peak >= true_peak
+    assert eng.stats["pages_peak"] == eng.pool.peak
+
+
 def test_paged_no_host_tier_never_corrupts(tiny):
     """host_offload=False + dry pool: slots must stall in place or
     preempt-restart, never write through a zero page-table row into page

@@ -1,0 +1,371 @@
+"""Sampler subsystem (DESIGN.md §3.7): on-device temperature / top-k /
+top-p selection with span-resident PRNG.
+
+Two load-bearing contracts:
+
+  * degenerate identity — ``temperature=0`` (and disabled filters) must
+    be byte-identical to the pre-sampler argmax engine in both KV
+    layouts at any span, so plugging in the subsystem changes nothing
+    for greedy traffic;
+  * stream determinism — a fixed-seed stochastic stream is a pure
+    function of ``(seed, req_id)``: invariant to span length, batch
+    neighbors, chunked vs monolithic prefill, park/unpark and
+    preempt-restart (keys re-derive from seed + replay position, like
+    KV restores — never re-seeded from scratch).
+"""
+import inspect
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.kernels import ops
+from repro.kernels import sampling as ks
+from repro.kernels.ref import sample_logits_ref
+from repro.models import lm
+from repro.serve import engine as engine_mod
+from repro.serve.api import (SAMPLERS, EngineConfig, Request,
+                             SamplingParams, register_sampler)
+from repro.serve.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(n, seed=0, vocab=256):
+    return np.random.default_rng(seed).integers(
+        1, vocab, size=n).astype(np.int32)
+
+
+def _mk(cfg, params, span, **kw):
+    e = dict(slots=3, cache_len=96, n_pages=64, page_size=8, eos_token=-1,
+             decode_span=span)
+    e.update(kw)
+    return ServingEngine(cfg, params, EngineConfig(**e))
+
+
+def _sp(temp=0.9, seed=11, **kw):
+    return SamplingParams(temperature=temp, top_k=kw.pop("top_k", 40),
+                          top_p=kw.pop("top_p", 0.95), seed=seed, **kw)
+
+
+def _run(eng, reqs, max_new=12, sampling=None):
+    for i, p in reqs:
+        eng.submit(Request(i, p.copy(), max_new_tokens=max_new,
+                           sampling=sampling or SamplingParams()))
+    done = eng.run_until_done()
+    assert len(done) == len(reqs)
+    return {r.req_id: tuple(r.tokens_out) for r in done}
+
+
+REQS = [(i, _prompt(n, seed=70 + i)) for i, n in enumerate([22, 9, 15])]
+
+
+# ---------------------------------------------------------------------------
+# kernel level: fused == naive reference, degenerate identities
+# ---------------------------------------------------------------------------
+
+def _rand_logits(b, v, seed=0, scale=3.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(b, v)), jnp.float32) * scale
+
+
+def test_fused_kernel_matches_stepwise_ref():
+    """One fused sort + mask + draw == temperature, top-k, top-p applied
+    as separate naive per-row steps, for a mixed parameter batch."""
+    B, V = 8, 128
+    logits = _rand_logits(B, V, seed=1)
+    keys = ks.derive_keys(jnp.arange(B, dtype=jnp.int32),
+                          jnp.arange(30, 30 + B, dtype=jnp.int32),
+                          jnp.arange(B, dtype=jnp.int32))
+    temp = jnp.asarray([0.0, 0.5, 0.8, 1.0, 1.5, 0.7, 1.0, 2.0], jnp.float32)
+    top_k = jnp.asarray([0, 3, 0, V, 10, 1, 17, 5], jnp.int32)
+    top_p = jnp.asarray([1.0, 0.9, 0.6, 1.0, 0.3, 0.9, 0.85, 1.0],
+                        jnp.float32)
+    fused = ops.sample_logits(logits, keys, temp, top_k, top_p)
+    ref = sample_logits_ref(logits, keys, temp, top_k, top_p)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+
+
+def test_temperature_zero_is_argmax():
+    logits = _rand_logits(5, 64, seed=2)
+    keys = ks.derive_keys(jnp.zeros(5, jnp.int32), jnp.arange(5, dtype=jnp.int32),
+                          jnp.zeros(5, jnp.int32))
+    out = ops.sample_logits(logits, keys, jnp.zeros(5, jnp.float32),
+                            jnp.zeros(5, jnp.int32), jnp.ones(5, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+def test_disabled_filters_equal_pure_temperature():
+    """top_k=vocab and top_p=1.0 must NOT renormalize or perturb: the
+    draw equals a plain categorical over the scaled logits, exactly."""
+    B, V = 6, 96
+    logits = _rand_logits(B, V, seed=3)
+    keys = ks.derive_keys(jnp.full(B, 4, jnp.int32),
+                          jnp.arange(B, dtype=jnp.int32),
+                          jnp.full(B, 2, jnp.int32))
+    t = 0.85
+    for k_off in (0, V):                     # both "disabled" spellings
+        out = ops.sample_logits(
+            logits, keys, jnp.full(B, t, jnp.float32),
+            jnp.full(B, k_off, jnp.int32), jnp.ones(B, jnp.float32))
+        pure = jax.vmap(jax.random.categorical)(keys, logits / t)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(pure))
+
+
+def test_top_k_top_p_restrict_support():
+    """Every draw lands inside the top-k set and inside the nucleus."""
+    B, V, K = 4, 64, 5
+    logits = _rand_logits(B, V, seed=4, scale=1.0)
+    topk_sets = np.argsort(-np.asarray(logits), axis=-1)[:, :K]
+    for i in range(40):
+        keys = ks.derive_keys(jnp.full(B, 9, jnp.int32),
+                              jnp.arange(B, dtype=jnp.int32),
+                              jnp.full(B, i, jnp.int32))
+        out = np.asarray(ops.sample_logits(
+            logits, keys, jnp.ones(B, jnp.float32),
+            jnp.full(B, K, jnp.int32), jnp.full(B, 0.6, jnp.float32)))
+        for b in range(B):
+            assert out[b] in topk_sets[b]
+
+
+def test_derive_keys_distinct_and_reproducible():
+    seeds = jnp.asarray([1, 1, 1, 2], jnp.int32)
+    rids = jnp.asarray([0, 1, 0, 0], jnp.int32)
+    idxs = jnp.asarray([0, 0, 1, 0], jnp.int32)
+    keys = np.asarray(ks.derive_keys(seeds, rids, idxs))
+    assert len({tuple(k) for k in keys}) == 4      # all distinct
+    again = np.asarray(ks.derive_keys(seeds, rids, idxs))
+    np.testing.assert_array_equal(keys, again)     # pure function
+
+
+def test_select_token_logprob_matches_log_softmax():
+    logits = _rand_logits(3, 32, seed=5)
+    tok, lp = lm.select_token(logits)
+    lsm = np.asarray(jax.nn.log_softmax(np.asarray(logits), axis=-1))
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    np.testing.assert_allclose(
+        np.asarray(lp), lsm[np.arange(3), np.asarray(tok)], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine level: degenerate equivalence (temperature=0 == argmax)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_temp0_stochastic_identical_to_greedy(tiny, layout):
+    """temperature=0 through the stochastic sampler is byte-identical to
+    the greedy engine — both KV layouts, span 1 and 8."""
+    cfg, params = tiny
+    for span in (1, 8):
+        ref = _run(_mk(cfg, params, span, kv_layout=layout), REQS)
+        got = _run(_mk(cfg, params, span, kv_layout=layout,
+                       sampler="stochastic"),
+                   REQS, sampling=SamplingParams(temperature=0.0, seed=3))
+        assert got == ref, (layout, span)
+
+
+def test_fixed_seed_stream_span_and_layout_invariant(tiny):
+    """A fixed-seed stochastic stream is identical at span 1 and 8 and
+    across KV layouts (the PRNG counter rides the scan carry, advancing
+    only on emissions — span bucketing never shifts the key stream)."""
+    cfg, params = tiny
+    outs = {}
+    for layout in ("dense", "paged"):
+        for span in (1, 8):
+            outs[(layout, span)] = _run(
+                _mk(cfg, params, span, kv_layout=layout,
+                    sampler="stochastic"), REQS, sampling=_sp())
+    vals = list(outs.values())
+    assert all(v == vals[0] for v in vals), outs.keys()
+    # and it is genuinely stochastic: differs from greedy
+    assert vals[0] != _run(_mk(cfg, params, 8), REQS)
+
+
+def test_fixed_seed_stream_batch_invariant(tiny):
+    """batch=1 vs batched-with-neighbors: slot placement and neighbor
+    traffic must not leak into a request's key stream."""
+    cfg, params = tiny
+    target = (7, _prompt(18, seed=99))
+    solo = _run(_mk(cfg, params, 8, sampler="stochastic"), [target],
+                sampling=_sp(seed=21))
+    crowd = _run(_mk(cfg, params, 8, sampler="stochastic"),
+                 [(1, _prompt(25, seed=101)), target,
+                  (2, _prompt(11, seed=102))],
+                 sampling=_sp(seed=21))
+    assert crowd[7] == solo[7]
+
+
+def test_fixed_seed_stream_prefill_mode_invariant(tiny):
+    """Chunked vs monolithic prefill share the key stream (index 0 =
+    first token) and, at this fixed seed/config, the same decode
+    stream. (The two modes are logit-equal to 1e-4, not bitwise, so
+    this pins the common case — the key-derivation invariance — rather
+    than a universal guarantee; see DESIGN.md §3.7.)"""
+    cfg, params = tiny
+    mono = _run(_mk(cfg, params, 8, sampler="stochastic"), REQS,
+                sampling=_sp(seed=5))
+    chunked = _run(_mk(cfg, params, 8, sampler="stochastic",
+                       prefill_chunk=8, kv_layout="paged"), REQS,
+                   sampling=_sp(seed=5))
+    assert chunked == mono
+
+
+# ---------------------------------------------------------------------------
+# satellite: stochastic determinism across disruption
+# ---------------------------------------------------------------------------
+
+def test_stochastic_stream_survives_park_unpark(tiny):
+    """A request parked mid-generation and later unparked must emit the
+    undisturbed stream: PRNG state is restored like KV is (re-derived
+    from seed + replay position, NOT re-seeded from scratch — a
+    fresh-key implementation replays indices and fails here)."""
+    cfg, params = tiny
+    prompt = _prompt(11, seed=9)
+    sp = _sp(seed=13)
+    ref_eng = _mk(cfg, params, 1, sampler="stochastic")
+    ref_eng.submit(Request(0, prompt.copy(), max_new_tokens=20, sampling=sp))
+    ref = ref_eng.run_until_done()[0].tokens_out
+
+    eng = _mk(cfg, params, 4, sampler="stochastic")
+    eng.submit(Request(0, prompt.copy(), max_new_tokens=20, sampling=sp))
+    eng.step()                          # prefill + one 4-token span
+    assert len(eng.slot_req[0].tokens_out) == 5
+    assert eng._evict_someone(exclude=-1)
+    for _ in range(3):
+        eng.step()                      # spans run with the slot frozen
+    time.sleep(0.001)
+    done = eng.run_until_done()
+    assert eng.stats["unparked"] == 1
+    assert done[0].tokens_out == ref
+
+
+def test_stochastic_stream_survives_preempt_restart(tiny):
+    """Preempt-restart clears host bookkeeping, so replay restarts the
+    key stream at index 0 and must reproduce the reference exactly."""
+    cfg, params = tiny
+    prompt = _prompt(13, seed=31)
+    sp = _sp(seed=17)
+    ref_eng = _mk(cfg, params, 8, sampler="stochastic")
+    ref_eng.submit(Request(0, prompt.copy(), max_new_tokens=16, sampling=sp))
+    ref = ref_eng.run_until_done()[0].tokens_out
+
+    eng = _mk(cfg, params, 8, sampler="stochastic")
+    eng.submit(Request(0, prompt.copy(), max_new_tokens=16, sampling=sp))
+    eng.step()                          # emits the first span
+    assert len(eng.slot_req[0].tokens_out) > 1
+    eng._preempt_restart(0)             # pages dropped, requeued fresh
+    done = eng.run_until_done()
+    assert eng.stats["preempt_restarts"] == 1
+    assert done[0].tokens_out == ref
+
+
+# ---------------------------------------------------------------------------
+# satellite: prefill first-token selection on device, accounted syncs
+# ---------------------------------------------------------------------------
+
+def test_prefill_selects_first_token_through_sampler(tiny):
+    """The host-side eager `int(jnp.argmax(logits[0]))` chains are gone:
+    prefill routes token selection through the sampler on device."""
+    src = (inspect.getsource(engine_mod.ServingEngine._prefill_full)
+           + inspect.getsource(engine_mod.ServingEngine._process_chunk))
+    assert "argmax" not in src
+    assert "_first_token" in src
+
+
+def test_host_sync_accounting_covers_prefill(tiny):
+    """Every prefill costs exactly ONE accounted device->host sync (the
+    fused token+logprob pair) no matter how many chunks streamed in, and
+    every decode span costs one: host_syncs == prefills + decode_spans.
+    Fails on the unaccounted per-prefill argmax reads."""
+    cfg, params = tiny
+    for kw in (dict(), dict(prefill_chunk=8, kv_layout="paged")):
+        eng = _mk(cfg, params, 4, **kw)
+        _run(eng, REQS, max_new=9)
+        assert eng.stats["host_syncs"] == (eng.stats["prefills"]
+                                           + eng.stats["decode_spans"]), kw
+        if kw:                           # multi-chunk prompts really ran
+            assert eng.stats["prefill_chunks"] > eng.stats["prefills"]
+
+
+def test_stochastic_adds_zero_host_syncs(tiny):
+    """Acceptance: swapping greedy -> stochastic adds no host syncs —
+    selection never leaves the device (eos=-1 keeps span counts equal)."""
+    cfg, params = tiny
+    for span in (1, 8):
+        g = _mk(cfg, params, span)
+        _run(g, REQS)
+        s = _mk(cfg, params, span, sampler="stochastic")
+        _run(s, REQS, sampling=_sp())
+        assert s.stats["host_syncs"] == g.stats["host_syncs"], span
+        assert s.stats["decode_spans"] == g.stats["decode_spans"], span
+
+
+# ---------------------------------------------------------------------------
+# logprobs ride the span sync
+# ---------------------------------------------------------------------------
+
+def test_logprobs_recorded_without_extra_syncs(tiny):
+    cfg, params = tiny
+    eng = _mk(cfg, params, 8, sampler="stochastic")
+    eng.submit(Request(0, _prompt(10, seed=41), max_new_tokens=8,
+                       sampling=_sp(seed=2, logprobs=True)))
+    done = eng.run_until_done()
+    assert eng.stats["host_syncs"] == (eng.stats["prefills"]
+                                       + eng.stats["decode_spans"])
+    r = done[0]
+    assert len(r.logprobs_out) == len(r.tokens_out) == 8
+    assert all(lp <= 0.0 for lp in r.logprobs_out)
+
+
+# ---------------------------------------------------------------------------
+# registry: third-party samplers plug in without engine edits
+# ---------------------------------------------------------------------------
+
+def test_third_party_sampler_via_registry(tiny):
+    cfg, params = tiny
+
+    @register_sampler("const-seven")
+    class ConstSampler:
+        """Degenerate handler: always emits token 7."""
+        needs_rng = False
+
+        def slot_params(self, req):
+            return ()
+
+        def sample(self, logits, keys, params):
+            return jnp.full(logits.shape[:1], 7, jnp.int32)
+
+    try:
+        eng = _mk(cfg, params, 4, sampler="const-seven")
+        outs = _run(eng, [(0, _prompt(9, seed=51))], max_new=6)
+        assert outs[0] == (7,) * 6       # prefill + every span token
+    finally:
+        SAMPLERS.pop("const-seven", None)
+
+
+def test_seed_outside_int32_wraps_instead_of_crashing(tiny):
+    """Hash-derived seeds routinely exceed 2^31; they fold into the key
+    modulo 2^32 instead of overflowing the int32 rng arrays."""
+    cfg, params = tiny
+    eng = _mk(cfg, params, 8, sampler="stochastic")
+    outs = _run(eng, [(2**40 + 3, _prompt(9, seed=61))], max_new=6,
+                sampling=_sp(seed=2**31 + 5))
+    assert len(outs[2**40 + 3]) == 6
+
+
+def test_unknown_sampler_name_is_loud(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="unknown sampler"):
+        _mk(cfg, params, 4, sampler="nope")
