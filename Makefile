@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench-smoke bench-sched bench-prefill bench-decode \
-	bench-sample bench quickstart
+	bench-sample bench-load bench quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,6 +24,9 @@ bench-decode:
 
 bench-sample:
 	$(PY) benchmarks/sampling_overhead.py --smoke
+
+bench-load:
+	$(PY) benchmarks/serving_load.py --smoke
 
 bench:
 	$(PY) benchmarks/run.py

@@ -20,7 +20,7 @@ def main() -> None:
     from benchmarks import (building_blocks, chunked_prefill,
                             decode_throughput, e2e, kv_scaling,
                             module_footprint, reliability, resource_miss,
-                            sampling_overhead, scheduler_qos)
+                            sampling_overhead, scheduler_qos, serving_load)
     smoke = "--smoke" in sys.argv
     if smoke:
         sections = [
@@ -29,6 +29,7 @@ def main() -> None:
              lambda: decode_throughput.run(smoke=True)),
             ("sec3_sampling_overhead",
              lambda: sampling_overhead.run(smoke=True)),
+            ("sec4_serving_load", lambda: serving_load.run(smoke=True)),
             ("fig14_e2e_prototype", e2e.run),
         ]
     else:
@@ -41,6 +42,7 @@ def main() -> None:
             ("sec3_chunked_prefill", chunked_prefill.run),
             ("sec3_decode_spans", decode_throughput.run),
             ("sec3_sampling_overhead", sampling_overhead.run),
+            ("sec4_serving_load", serving_load.run),
             ("sec6.1_reliability_gbn_sr", reliability.run),
             ("fig14_e2e_prototype", e2e.run),
         ]

@@ -1,1 +1,2 @@
+from repro.ft.faults import ServingFaultInjector  # noqa
 from repro.ft.manager import FaultTolerantTrainer, FTConfig  # noqa

@@ -4,6 +4,19 @@ Subsystems are selected by name through the pluggable API (DESIGN.md §2):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --requests 8 --kv-layout paged --scheduler priority
+
+With ``--arrival-rate`` the launcher switches from batch mode
+(everything submitted up front) to live-traffic mode (DESIGN.md §3.8):
+a Poisson or bursty timed trace replayed through the front end on a
+deterministic virtual clock (1 engine step = ``--step-dt`` time units;
+``--real-time`` uses the wall clock), with per-token streaming and
+SLO-graded admission:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+      --arrival-rate 0.3 --scheduler priority --stream
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+      --arrival bursty --arrival-rate 2.0 --admit-capacity 8 \
+      --slo-ttft 0 30 --slo-tpot 0 8
 """
 from __future__ import annotations
 
@@ -16,7 +29,60 @@ import numpy as np
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.models import lm
 from repro.serve.api import (EngineConfig, Request, SamplingParams,
-                             default_page_budget, make_engine)
+                             default_page_budget, make_engine,
+                             make_frontend)
+from repro.serve.frontend import VirtualClock
+from repro.serve.loadgen import TraceSpec, make_trace
+
+
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if xs else float("nan")
+
+
+def _run_live(cfg, params, ecfg, sp, args):
+    """Live-traffic mode: timed trace -> frontend -> per-class report."""
+    fe = make_frontend("local", eng := make_engine(cfg, params, ecfg),
+                       step_dt=0.0 if args.real_time else args.step_dt)
+    spec = TraceSpec(
+        arrival=args.arrival, rate=args.arrival_rate, burst=args.burst,
+        prompt_lens=((0.7, 8, 32), (0.3, 32, 48)),
+        output_lens=((1.0, min(4, args.max_new), args.max_new),),
+        qos_weights=tuple([1.0] * args.qos_classes),
+        sampling=sp, seed=args.seed)
+    trace = make_trace(spec, args.requests, cfg.vocab_size)
+    if args.stream:
+        trace = [(t, r, lambda tok, idx, r=r:
+                  print(f"  req {r.req_id} (qos {r.qos}) "
+                        f"token[{idx}] = {tok}"))
+                 for t, r in trace]
+    t0 = time.perf_counter()
+    handles = fe.run(trace)
+    dt = time.perf_counter() - t0
+    print(f"{len(handles)} arrivals over {fe.steps} steps in {dt:.1f}s  "
+          f"[{args.arrival} @ {args.arrival_rate}/unit, "
+          f"{ecfg.kv_layout} kv, {ecfg.scheduler} scheduler]")
+    print("frontend stats:", {k: v for k, v in fe.stats.items() if v})
+    print("qos,n,completed,shed,rejected,ttft_p50,ttft_p95,"
+          "tpot_p50,tpot_p95,goodput_slo")
+    for cls in range(args.qos_classes):
+        mine = [h for h in handles if h.req.qos == cls]
+        ttft = [h.ttft for h in mine if h.ttft is not None]
+        tpot = [h.tpot for h in mine if h.tpot is not None]
+        good = sum(1 for h in mine
+                   if h.meets_slo(ecfg.slo_ttft, ecfg.slo_tpot))
+        print(f"{cls},{len(mine)},"
+              f"{sum(1 for h in mine if h.ok)},"
+              f"{sum(1 for h in mine if h.outcome == 'shed')},"
+              f"{sum(1 for h in mine if h.outcome == 'rejected')},"
+              f"{_pct(ttft, 50):.1f},{_pct(ttft, 95):.1f},"
+              f"{_pct(tpot, 50):.2f},{_pct(tpot, 95):.2f},"
+              f"{good / max(1, len(mine)):.3f}")
+    for e in fe.shed_log:
+        print(f"# drop: req {e['req_id']} qos {e['qos']} "
+              f"reason={e['reason']} t={e['t']:.1f}")
+    assert (eng.stats["host_syncs"]
+            == eng.stats["prefills"] + eng.stats["decode_spans"])
+    assert all(h.streamed == h.req.tokens_out for h in handles if h.ok)
 
 
 def main():
@@ -61,6 +127,33 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling seed; streams replay from "
                          "(seed, req_id) regardless of batching")
+    # live-traffic mode (DESIGN.md §3.8)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="offered load in requests per time unit; > 0 "
+                         "switches to live-traffic mode (timed trace "
+                         "through the front end)")
+    ap.add_argument("--arrival", choices=("poisson", "bursty"),
+                    default="poisson")
+    ap.add_argument("--burst", type=float, default=6.0,
+                    help="mean burst size for --arrival bursty")
+    ap.add_argument("--admit-capacity", type=int, default=16,
+                    help="bounded wait pool; overload sheds the lowest "
+                         "classes, never a higher one for a lower")
+    ap.add_argument("--slo-ttft", type=float, nargs="*", default=(),
+                    help="per-class TTFT budgets (time units, class 0 "
+                         "first, <= 0 = unbudgeted); waiters past "
+                         "budget are shed explicitly")
+    ap.add_argument("--slo-tpot", type=float, nargs="*", default=(),
+                    help="per-class TPOT budgets for goodput accounting")
+    ap.add_argument("--degrade-max-new", type=int, default=0,
+                    help="under pressure, clamp non-top-class responses "
+                         "to this many tokens instead of shedding")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they stream out per request")
+    ap.add_argument("--step-dt", type=float, default=1.0,
+                    help="virtual time units consumed per engine step")
+    ap.add_argument("--real-time", action="store_true",
+                    help="wall clock instead of the virtual clock")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -69,16 +162,25 @@ def main():
         args.slots, args.cache_len, args.page_size)
     sampler = args.sampler or (
         "stochastic" if args.temperature > 0 else "greedy")
-    eng = make_engine(cfg, params, EngineConfig(
+    live = args.arrival_rate > 0
+    ecfg = EngineConfig(
         slots=args.slots, cache_len=args.cache_len,
         n_pages=n_pages, page_size=args.page_size,
         kv_layout=args.kv_layout, scheduler=args.scheduler,
         qos_classes=args.qos_classes, eos_token=-1,
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
-        decode_span=args.decode_span, sampler=sampler))
+        decode_span=args.decode_span, sampler=sampler,
+        admit_capacity=args.admit_capacity,
+        degrade_max_new=args.degrade_max_new,
+        slo_ttft=tuple(args.slo_ttft), slo_tpot=tuple(args.slo_tpot),
+        clock=(time.perf_counter if args.real_time or not live
+               else VirtualClock()))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed)
+    if live:
+        return _run_live(cfg, params, ecfg, sp, args)
+    eng = make_engine(cfg, params, ecfg)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(i, rng.integers(

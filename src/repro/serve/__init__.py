@@ -1,7 +1,11 @@
-from repro.serve.api import (EngineConfig, KVBackend, ParkingTransport,  # noqa
-                             ParkMeta, Request, Sampler, SamplingParams,
-                             Scheduler, default_page_budget, make_engine,
-                             make_kv_backend, make_sampler, make_scheduler,
-                             register_kv_backend, register_sampler,
-                             register_scheduler)
+from repro.serve.api import (EngineConfig, Frontend, KVBackend,  # noqa
+                             ParkingTransport, ParkMeta, Request, Sampler,
+                             SamplingParams, Scheduler, default_page_budget,
+                             make_engine, make_frontend, make_kv_backend,
+                             make_sampler, make_scheduler,
+                             register_frontend, register_kv_backend,
+                             register_sampler, register_scheduler,
+                             slo_budget)
 from repro.serve.engine import ServingEngine  # noqa
+from repro.serve.frontend import (LocalFrontend, RequestHandle,  # noqa
+                                  VirtualClock)

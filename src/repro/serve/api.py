@@ -4,7 +4,7 @@ JingZhao's pitch is a fixed frame with swappable subsystems: prototype the
 Queue / Resource / Transport machinery once, then drop new network
 functions into stable interfaces. This module is that frame for the
 serving engine. `ServingEngine` (serve/engine.py) is a thin driver over
-four protocols, each the serving analogue of a paper subsystem:
+five protocols, each the serving analogue of a paper subsystem:
 
   Scheduler        <- Queue Subsystem   (doorbell -> WQE dispatch, QoS
                       classes over a real N-queue HostMultiQueue)
@@ -15,17 +15,22 @@ four protocols, each the serving analogue of a paper subsystem:
   Sampler          <- a Semantics-tier handler (sPIN's model): per-token
                       selection runs ON DEVICE inside the decode span,
                       swappable without forking the pipeline (§3.7)
+  Frontend         <- the client-facing side of the Transport tier:
+                      continuous arrivals while the engine steps,
+                      per-token streaming, SLO-graded admission (§3.8)
 
 Implementations register by name (`register_scheduler`,
-`register_kv_backend`, `register_sampler`) so launchers, benchmarks, and
-third-party code select parts with a string — adding a scheduling
-policy, KV layout, or sampling strategy is a plug-in, not an engine
-edit. serve/schedulers.py, serve/kv_backends.py, serve/samplers.py and
-serve/parking.py hold the built-ins; `make_engine` wires a full engine
-from an `EngineConfig`.
+`register_kv_backend`, `register_sampler`, `register_frontend`) so
+launchers, benchmarks, and third-party code select parts with a string —
+adding a scheduling policy, KV layout, sampling strategy, or serving
+front end is a plug-in, not an engine edit. serve/schedulers.py,
+serve/kv_backends.py, serve/samplers.py, serve/parking.py and
+serve/frontend.py hold the built-ins; `make_engine` wires a full engine
+from an `EngineConfig` and `make_frontend` a front end over it.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
                     Protocol, Tuple, Type, runtime_checkable)
@@ -69,6 +74,17 @@ class Request:
     finished_at: Optional[float] = None
     sampling: SamplingParams = field(default_factory=SamplingParams)
     logprobs_out: List[float] = field(default_factory=list)
+    # streaming hooks (DESIGN.md §3.8): the engine invokes `on_tokens`
+    # with the freshly appended token batch at each host-sync point (one
+    # per prefill completion, one per decode span — never more), and
+    # `on_done` exactly once when the request completes. A preempt-
+    # restart replays the stream from index 0; the Frontend handle
+    # dedupes by emitted index so client streams stay byte-identical to
+    # `tokens_out`.
+    on_tokens: Optional[Callable[["Request", List[int]], None]] = \
+        field(default=None, repr=False, compare=False)
+    on_done: Optional[Callable[["Request"], None]] = \
+        field(default=None, repr=False, compare=False)
 
 
 @dataclass
@@ -90,9 +106,26 @@ class EngineConfig:
     kv_layout: str = "dense"      # KVBackend name: "dense" | "paged"
     scheduler: str = "fcfs"       # Scheduler name: "fcfs" | "priority" | ...
     sampler: str = "greedy"       # Sampler name: "greedy" | "stochastic"
+    frontend: str = "local"       # Frontend name (DESIGN.md §3.8)
     qos_classes: int = 4          # queues a multi-class scheduler exposes
     queue_capacity: int = 1 << 12
     bus: BusModel = field(default_factory=BusModel)
+    # the ONE time source: arrival stamps, eviction tie-breaks, bus-timed
+    # park/restore readiness and SLO accounting all read it, so tests and
+    # benchmarks swap in a deterministic virtual clock (frontend.VirtualClock)
+    clock: Callable[[], float] = field(default=time.perf_counter,
+                                       repr=False, compare=False)
+    # -- front-end admission control (DESIGN.md §3.8) -----------------
+    admit_capacity: int = 64      # bounded front-end wait pool (all classes)
+    feed_depth: int = 0           # engine-scheduler backlog the frontend
+                                  # keeps fed; 0 derives it from `slots`
+    slo_ttft: Tuple[float, ...] = ()   # per-class TTFT budgets, clock units
+                                       # (shorter tuple broadcasts its last
+                                       # entry; () or <= 0 = no budget)
+    slo_tpot: Tuple[float, ...] = ()   # per-class per-token budgets
+    degrade_max_new: int = 0      # > 0: under pressure, non-top classes
+                                  # are admitted with max_new_tokens
+                                  # clamped to this instead of shed
 
 
 class ParkMeta(NamedTuple):
@@ -124,6 +157,10 @@ class Scheduler(Protocol):
     def requeue(self, req: Request) -> bool: ...
     @property
     def pending(self) -> int: ...
+    @property
+    def space(self) -> int: ...   # free submit capacity (backpressure
+    #                               signal — a caller that checks it never
+    #                               has to learn about fullness by raising)
 
 
 @runtime_checkable
@@ -197,6 +234,30 @@ class Sampler(Protocol):
 
 
 @runtime_checkable
+class Frontend(Protocol):
+    """Serving Front End: the client-facing side of the Transport tier
+    (DESIGN.md §3.8).
+
+    `submit` accepts a request at ANY time — including between engine
+    steps of an in-flight run (continuous arrivals) — applies SLO-graded
+    admission control over bounded per-class wait queues, and returns a
+    handle that streams tokens and resolves to an explicit terminal
+    outcome (completed | rejected | shed — never a silent drop). `step`
+    pumps one engine step: expire SLO-blown waiters, feed the engine's
+    scheduler up to `feed_depth`, run `engine.step()`, resolve
+    completions. `run` drives a timed arrival trace to drain.
+    """
+
+    def submit(self, req: Request,
+               on_token: Optional[Callable] = None) -> Any: ...
+    def step(self) -> None: ...
+    def run(self, arrivals=None, max_steps: int = 100_000,
+            drain: bool = True) -> List[Any]: ...
+    @property
+    def live(self) -> bool: ...
+
+
+@runtime_checkable
 class ParkingTransport(Protocol):
     """Transport Subsystem: the host-tier move/restore channel.
 
@@ -222,6 +283,7 @@ class ParkingTransport(Protocol):
 SCHEDULERS: Dict[str, Type] = {}
 KV_BACKENDS: Dict[str, Type] = {}
 SAMPLERS: Dict[str, Type] = {}
+FRONTENDS: Dict[str, Type] = {}
 
 
 def register_scheduler(name: str) -> Callable[[Type], Type]:
@@ -244,6 +306,14 @@ def register_sampler(name: str) -> Callable[[Type], Type]:
     def deco(cls: Type) -> Type:
         cls.name = name
         SAMPLERS[name] = cls
+        return cls
+    return deco
+
+
+def register_frontend(name: str) -> Callable[[Type], Type]:
+    def deco(cls: Type) -> Type:
+        cls.name = name
+        FRONTENDS[name] = cls
         return cls
     return deco
 
@@ -271,6 +341,24 @@ def make_sampler(name: str) -> Sampler:
         raise ValueError(f"unknown sampler {name!r}; "
                          f"registered: {sorted(SAMPLERS)}")
     return SAMPLERS[name]()
+
+
+def make_frontend(name: str, engine, **kw) -> Frontend:
+    from repro.serve import frontend  # noqa: F401  (registers built-ins)
+    if name not in FRONTENDS:
+        raise ValueError(f"unknown frontend {name!r}; "
+                         f"registered: {sorted(FRONTENDS)}")
+    return FRONTENDS[name](engine, **kw)
+
+
+def slo_budget(cls: int, budgets: Tuple[float, ...]) -> Optional[float]:
+    """Per-class SLO budget lookup: a shorter tuple broadcasts its last
+    entry to the remaining (lower) classes; `()` or a non-positive entry
+    means no budget for that class."""
+    if not budgets:
+        return None
+    b = budgets[cls] if cls < len(budgets) else budgets[-1]
+    return float(b) if b > 0 else None
 
 
 def make_engine(cfg, params, ecfg: EngineConfig, policy=None,

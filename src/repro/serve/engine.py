@@ -37,7 +37,6 @@ per-step decode in both KV layouts.
 """
 from __future__ import annotations
 
-import time
 from typing import List, Optional
 
 import jax
@@ -85,12 +84,17 @@ class ServingEngine:
         if ecfg.decode_span < 1:
             raise ValueError(
                 f"decode_span must be >= 1, got {ecfg.decode_span}")
+        # the injected time source (EngineConfig.clock): arrival stamps,
+        # completion stamps and the parking bus all read it, so a virtual
+        # clock makes ordering and eviction tie-breaks fully deterministic
+        self.clock = ecfg.clock
         self.kv = kv_backend or make_kv_backend(ecfg.kv_layout, cfg, ecfg)
         self.state = self.kv.init_state()
         self.sched = scheduler or make_scheduler(
             ecfg.scheduler, n_classes=ecfg.qos_classes,
             capacity=ecfg.queue_capacity)
-        self.transport = transport or HostParkingTransport(ecfg.bus)
+        self.transport = transport or HostParkingTransport(
+            ecfg.bus, clock=self.clock)
         self.sampler = sampler or make_sampler(ecfg.sampler)
         self._needs_rng = bool(getattr(self.sampler, "needs_rng", False))
         self.active = np.zeros(B, bool)          # slot has a sequence
@@ -182,7 +186,10 @@ class ServingEngine:
         return (jnp.asarray(seeds), jnp.asarray(rids), jnp.asarray(ctrs))
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request):
+    def try_submit(self, req: Request) -> bool:
+        """Validate + enqueue; False means scheduler-queue backpressure
+        (the caller keeps the request — nothing was consumed). Impossible
+        requests still raise: no queue state can ever make them fit."""
         if len(req.prompt) + 1 > self.ecfg.cache_len:
             # the prompt plus one generated token must fit the per-slot
             # table/slab; longer prompts would scatter past max_pages
@@ -197,8 +204,11 @@ class ServingEngine:
             raise ValueError(
                 f"request needs {worst} KV tokens but the pool holds only "
                 f"{self.ecfg.n_pages * self.ecfg.page_size}")
-        req.arrived_at = time.perf_counter()
-        if not self.sched.submit(req):
+        req.arrived_at = self.clock()
+        return self.sched.submit(req)
+
+    def submit(self, req: Request):
+        if not self.try_submit(req):
             raise RuntimeError(
                 f"scheduler queue full (capacity "
                 f"{self.ecfg.queue_capacity}); request {req.req_id} rejected")
@@ -216,10 +226,26 @@ class ServingEngine:
         self.slot_req[slot] = None
 
     def _complete(self, slot: int, req: Request):
-        req.finished_at = time.perf_counter()
+        req.finished_at = self.clock()
         self.completed.append(req)
         self.kv.release(req.req_id)
         self._release_slot(slot)
+        if req.on_done is not None:
+            req.on_done(req)
+
+    def _emit(self, req: Request, toks: List[int],
+              lps: Optional[List[float]] = None):
+        """THE token-emission funnel: every token a request ever receives
+        — prefill first tokens (monolithic or chunked) and decode-span
+        batches — is appended here, at a point the host already holds the
+        values from its one accounted sync. Streaming therefore costs
+        zero extra host syncs: `on_tokens` observes exactly what
+        `tokens_out` received, in the same order."""
+        req.tokens_out.extend(toks)
+        if lps is not None and req.sampling.logprobs:
+            req.logprobs_out.extend(lps)
+        if req.on_tokens is not None and toks:
+            req.on_tokens(req, toks)
 
     def _admit(self) -> int:
         admitted = 0
@@ -360,9 +386,7 @@ class ServingEngine:
         self.prefilling[slot] = False
         self.prefill_pos[slot] = total
         self._donate_prefix(slot, req)
-        req.tokens_out.append(first_tok)
-        if req.sampling.logprobs:
-            req.logprobs_out.append(first_lp)
+        self._emit(req, [first_tok], [first_lp])
         # the prefill token can already satisfy the contract: never run
         # (or append) a decode token past max_new_tokens or EOS
         if (len(req.tokens_out) >= req.max_new_tokens
@@ -689,10 +713,11 @@ class ServingEngine:
             req = self.slot_req[i]
             if req is None or not act[i]:
                 continue
-            new = toks[emit[:, i], i]        # slot i's emissions, in order
-            req.tokens_out.extend(int(t) for t in new)
-            if lps is not None and req.sampling.logprobs:
-                req.logprobs_out.extend(float(x) for x in lps[emit[:, i], i])
+            new = [int(t) for t in toks[emit[:, i], i]]  # slot i's
+            #                                       emissions, in order
+            self._emit(req, new,
+                       None if lps is None
+                       else [float(x) for x in lps[emit[:, i], i]])
             self.stats["decode_tokens"] += len(new)
             done = (len(req.tokens_out) >= req.max_new_tokens
                     or (len(new) and int(new[-1]) == self.ecfg.eos_token)

@@ -10,7 +10,7 @@ real waiting, not a flag.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
@@ -19,10 +19,17 @@ from repro.serve.api import ParkMeta
 
 
 class HostParkingTransport:
-    """In-process host-DRAM tier with bus-timed park/restore."""
+    """In-process host-DRAM tier with bus-timed park/restore.
 
-    def __init__(self, bus: Optional[BusModel] = None):
+    `clock` is the engine's injected time source (EngineConfig.clock):
+    under a virtual clock, restore readiness becomes a deterministic
+    function of advanced time instead of wall-clock racing.
+    """
+
+    def __init__(self, bus: Optional[BusModel] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.bus = bus or BusModel()
+        self._clock = clock
         self._tier: Dict[int, Tuple[Any, ParkMeta]] = {}
         self._ready_at: Dict[int, float] = {}
         self.bytes_moved = 0.0
@@ -30,12 +37,12 @@ class HostParkingTransport:
     def begin(self, req_id: int, caches, meta: ParkMeta) -> None:
         nbytes = sum(c.nbytes for c in jax.tree.leaves(caches))
         self._tier[req_id] = (caches, meta)
-        self._ready_at[req_id] = (time.perf_counter()
+        self._ready_at[req_id] = (self._clock()
                                   + self.bus.transfer_time(nbytes))
         self.bytes_moved += nbytes
 
     def ready(self, now: Optional[float] = None) -> List[int]:
-        now = time.perf_counter() if now is None else now
+        now = self._clock() if now is None else now
         return [rid for rid, t in list(self._ready_at.items()) if t <= now]
 
     def peek(self, req_id: int) -> Tuple[Any, ParkMeta]:

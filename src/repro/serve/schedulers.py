@@ -41,6 +41,14 @@ class _MultiQueueScheduler:
     def pending(self) -> int:
         return self.mq.total_len
 
+    @property
+    def space(self) -> int:
+        """Free submit capacity — the bounded-queue backpressure signal:
+        a front end checks it (or `submit`'s False) and holds work in its
+        own admission tier instead of learning about fullness from a
+        raise."""
+        return self.mq.free_slots
+
 
 @register_scheduler("fcfs")
 class FcfsScheduler(_MultiQueueScheduler):
