@@ -2,11 +2,14 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-sched bench-prefill bench-decode \
+.PHONY: test lint bench-smoke bench-sched bench-prefill bench-decode \
 	bench-sample bench-load bench quickstart
 
 test:
 	$(PY) -m pytest -x -q
+
+lint:
+	$(PY) -m repro.analysis src/ --baseline .jzlint-baseline.json
 
 bench-smoke:
 	$(PY) benchmarks/kv_scaling.py --mode paged

@@ -1,0 +1,29 @@
+"""jzlint — static contract checks for the engine's device/host
+discipline (DESIGN.md §8).
+
+The JingZhao shape applied to our own toolchain: a fixed analyzer frame
+with pluggable checker rules behind a name registry (the `serve/api.py`
+pattern). Built-in rules:
+
+  JZ001  blocking device reads in serve/ funnel through
+         ServingEngine._host_sync (host_syncs == prefills + decode_spans)
+  JZ002  jit scopes (jitted fns, Pallas kernel bodies, scan/while-loop
+         bodies and their statically-reachable callees) are trace-pure
+  JZ003  one injected time source: no wall-clock reads outside the
+         EngineConfig.clock / core.timing.Timer plumbing
+  JZ004  every pl.pallas_call in kernels/ pairs with a kernels/ref.py
+         oracle and a test importing both
+  JZ005  classes passed to register_* structurally satisfy the matching
+         subsystem Protocol (static mirror of the registration-time
+         check in serve/api.py)
+
+Usage:  python -m repro.analysis src/ [--format text|json]
+Inline suppression:  # jz: allow[JZ003] reason why this site is legal
+"""
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis.core import (Analyzer, Finding, Project, Report,
+                                 RULES, make_rules, register_rule)
+
+__all__ = ["Analyzer", "Finding", "Project", "Report", "RULES",
+           "make_rules", "register_rule", "load_baseline",
+           "write_baseline"]

@@ -1,0 +1,40 @@
+"""Grandfathered-findings baseline (JSON).
+
+A baseline lets the pass land on a tree with known debt: recorded
+findings are reported separately and do not fail the build, while any
+NEW finding still does. Identity is ``(rule, path, line)`` — stable
+enough for grandfathering, strict enough that edits near a baselined
+site re-surface it. The repo ships an **empty** baseline
+(`.jzlint-baseline.json`): the merged tree carries no grandfathered
+debt, and the file existing keeps the CI invocation honest (a finding
+can only be excused by an inline `# jz: allow[...]` with a reason).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional, Set, Tuple
+
+from repro.analysis.core import Report
+
+BaselineKey = Tuple[str, str, int]
+
+
+def load_baseline(path) -> Set[BaselineKey]:
+    p = Path(path)
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text())
+    return {(e["rule"], e["path"], int(e["line"]))
+            for e in data.get("findings", [])}
+
+
+def write_baseline(report: Report, path) -> int:
+    """Record the report's unsuppressed findings as the new baseline.
+    Returns the number of entries written."""
+    entries = [{"rule": f.rule, "path": f.path, "line": f.line,
+                "message": f.message}
+               for f in report.unsuppressed]
+    Path(path).write_text(json.dumps({"findings": entries}, indent=1)
+                          + "\n")
+    return len(entries)

@@ -1,0 +1,294 @@
+"""Import-aware name resolution and the jit-scope call graph.
+
+Two jobs, shared by the rules:
+
+1. **Dotted names** (`dotted(node, imports)`): render a call target or
+   attribute chain as a normalized dotted string with the *root resolved
+   through the module's import table*, so `jnp.argmax` -> `jax.numpy.argmax`,
+   `lax.scan` -> `jax.lax.scan`, and `from time import time; time()` ->
+   `time.time`. Rules pattern-match on these normalized strings instead
+   of re-implementing import bookkeeping.
+
+2. **Jit reachability** (`JitGraph`): find every *jit scope* — functions
+   decorated with `jax.jit` (directly or via `partial`), functions and
+   lambdas passed to a `jax.jit(...)` call, Pallas kernel bodies (the
+   callable handed to `pl.pallas_call`), and the body/cond callables of
+   `lax.scan` / `lax.while_loop` / `lax.fori_loop` — then walk the
+   static call graph (same-module names, nested defs, and `mod.func`
+   attribute calls resolved through imports) to every callee reachable
+   from those roots. JZ002 checks purity inside exactly that set.
+
+Resolution is deliberately static and conservative: calls through
+variables, containers, or methods on objects are not followed — a miss
+means a violation might hide behind dynamic dispatch, never that a
+clean function is falsely flagged.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Project, SourceFile
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+# --------------------------------------------------------------------------
+# imports + dotted names
+# --------------------------------------------------------------------------
+
+def import_map(tree: ast.Module) -> Dict[str, str]:
+    """local alias -> dotted origin ("np" -> "numpy", "lm" ->
+    "repro.models.lm", "time" (from time import time) -> "time.time")."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+                if a.asname:
+                    out[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def dotted(node: ast.AST, imports: Dict[str, str]) -> Optional[str]:
+    """Normalized dotted name of a Name/Attribute chain, or None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = imports.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def mentions_device_ns(node: ast.AST, imports: Dict[str, str]) -> bool:
+    """True if the expression references anything under jax/jnp — the
+    static proxy for "this value lives on device"."""
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Name, ast.Attribute)):
+            d = dotted(sub, imports)
+            if d and (d == "jax" or d.startswith(("jax.", "jnp."))):
+                return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# function scopes
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class FuncScope:
+    node: ast.AST                    # FunctionDef / AsyncFunctionDef / Lambda
+    sf: SourceFile
+    qualname: str
+    parent: Optional["FuncScope"]    # lexically enclosing function
+    children: Dict[str, "FuncScope"] = field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+
+def _collect_scopes(sf: SourceFile) -> Tuple[Dict[str, FuncScope],
+                                             Dict[int, FuncScope]]:
+    """(top-level name -> scope, id(node) -> scope) for one module."""
+    top: Dict[str, FuncScope] = {}
+    by_id: Dict[int, FuncScope] = {}
+
+    def visit(node: ast.AST, parent: Optional[FuncScope], prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, FuncNode):
+                name = getattr(child, "name", "<lambda>")
+                scope = FuncScope(child, sf, f"{prefix}{name}", parent)
+                by_id[id(child)] = scope
+                if parent is None and isinstance(node, ast.Module):
+                    top[name] = scope
+                elif parent is not None and not isinstance(child,
+                                                           ast.Lambda):
+                    parent.children[name] = scope
+                visit(child, scope, f"{prefix}{name}.")
+            elif isinstance(child, ast.ClassDef):
+                # methods become scopes (for lexical nesting) but are not
+                # name-resolvable targets — method dispatch is dynamic
+                visit(child, parent, f"{prefix}{child.name}.")
+            else:
+                visit(child, parent, prefix)
+
+    visit(sf.tree, None, f"{sf.module}." if sf.module else "")
+    return top, by_id
+
+
+# --------------------------------------------------------------------------
+# the jit graph
+# --------------------------------------------------------------------------
+
+_JIT_TAILS = ("jit",)
+_LOOP_BODIES = {"scan": (0,), "while_loop": (0, 1), "fori_loop": (2,)}
+
+
+def _is_jit_name(d: Optional[str]) -> bool:
+    return bool(d) and (d == "jit" or d.endswith(".jit"))
+
+
+def _is_loop_call(d: Optional[str]) -> Optional[Tuple[int, ...]]:
+    if not d:
+        return None
+    parts = d.split(".")
+    if parts[-1] in _LOOP_BODIES and (
+            "lax" in parts[:-1] or "jax" in parts[:-1]):
+        return _LOOP_BODIES[parts[-1]]
+    return None
+
+
+class JitGraph:
+    """Jit roots + static call-graph reachability over a Project."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.imports: Dict[str, Dict[str, str]] = {}
+        self.top: Dict[str, Dict[str, FuncScope]] = {}     # module -> funcs
+        self.scopes: Dict[int, FuncScope] = {}
+        self.enclosing: Dict[int, FuncScope] = {}          # any node -> scope
+        for sf in project.files:
+            self.imports[sf.rel] = import_map(sf.tree)
+            top, by_id = _collect_scopes(sf)
+            self.top.setdefault(sf.module, {}).update(top)
+            self.scopes.update(by_id)
+        self.roots: List[Tuple[FuncScope, str]] = []       # (scope, why)
+        self._find_roots()
+        self.reached: Dict[int, Tuple[FuncScope, str]] = {}
+        self._walk()
+
+    # -- resolution -----------------------------------------------------
+    def _resolve(self, node: ast.AST, sf: SourceFile,
+                 scope: Optional[FuncScope]) -> Optional[FuncScope]:
+        """Resolve a callable expression to a FuncScope, if static."""
+        if isinstance(node, ast.Lambda):
+            return self.scopes.get(id(node))
+        if isinstance(node, ast.Call):                    # partial(f, ...)
+            d = dotted(node.func, self.imports[sf.rel])
+            if d and d.split(".")[-1] == "partial" and node.args:
+                return self._resolve(node.args[0], sf, scope)
+            return None
+        if isinstance(node, ast.Name):
+            s = scope
+            while s is not None:                          # nested defs
+                if node.id in s.children:
+                    return s.children[node.id]
+                s = s.parent
+            mod_funcs = self.top.get(sf.module, {})
+            if node.id in mod_funcs:
+                return mod_funcs[node.id]
+            origin = self.imports[sf.rel].get(node.id)
+            if origin and "." in origin:                  # from m import f
+                mod, fn = origin.rsplit(".", 1)
+                return self.top.get(mod, {}).get(fn)
+            return None
+        if isinstance(node, ast.Attribute) and isinstance(node.value,
+                                                          ast.Name):
+            origin = self.imports[sf.rel].get(node.value.id)
+            if origin:                                    # mod.func(...)
+                return self.top.get(origin, {}).get(node.attr)
+        return None
+
+    def _scope_of(self, sf: SourceFile, node: ast.AST) -> \
+            Optional[FuncScope]:
+        return self.scopes.get(id(node))
+
+    # -- roots ----------------------------------------------------------
+    def _find_roots(self):
+        for sf in self.project.files:
+            imp = self.imports[sf.rel]
+            # (a) decorator roots
+            for nid, scope in self.scopes.items():
+                if scope.sf is not sf or isinstance(scope.node, ast.Lambda):
+                    continue
+                for deco in scope.node.decorator_list:
+                    d = dotted(deco, imp)
+                    if _is_jit_name(d):
+                        self._add_root(scope, "jax.jit-decorated")
+                        continue
+                    if isinstance(deco, ast.Call):
+                        dc = dotted(deco.func, imp)
+                        if _is_jit_name(dc):
+                            self._add_root(scope, "jax.jit-decorated")
+                        elif dc and dc.split(".")[-1] == "partial" \
+                                and deco.args \
+                                and _is_jit_name(dotted(deco.args[0], imp)):
+                            self._add_root(scope, "jax.jit-decorated")
+            # (b) call-site roots: jit(f), pallas_call(kernel),
+            #     lax.scan/while_loop/fori_loop bodies
+            parents = self._parent_scopes(sf)
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func, imp)
+                encl = parents.get(id(node))
+                if _is_jit_name(d) and node.args:
+                    tgt = self._resolve(node.args[0], sf, encl)
+                    if tgt is not None:
+                        self._add_root(tgt, "passed to jax.jit")
+                elif d and d.split(".")[-1] == "pallas_call" and node.args:
+                    tgt = self._resolve(node.args[0], sf, encl)
+                    if tgt is not None:
+                        self._add_root(tgt, "pl.pallas_call kernel body")
+                else:
+                    idxs = _is_loop_call(d)
+                    if idxs:
+                        for i in idxs:
+                            if i < len(node.args):
+                                tgt = self._resolve(node.args[i], sf, encl)
+                                if tgt is not None:
+                                    self._add_root(
+                                        tgt,
+                                        f"{d.split('.')[-1]} body")
+
+    def _parent_scopes(self, sf: SourceFile) -> Dict[int, FuncScope]:
+        """id(node) -> innermost enclosing FuncScope, for one module."""
+        out: Dict[int, FuncScope] = {}
+
+        def visit(node, scope):
+            for child in ast.iter_child_nodes(node):
+                s = self.scopes.get(id(child), scope) \
+                    if isinstance(child, FuncNode) else scope
+                out[id(child)] = s
+                visit(child, s)
+
+        visit(sf.tree, None)
+        return out
+
+    def _add_root(self, scope: FuncScope, why: str):
+        self.roots.append((scope, why))
+
+    # -- reachability ---------------------------------------------------
+    def _walk(self):
+        queue: List[Tuple[FuncScope, str]] = list(self.roots)
+        while queue:
+            scope, why = queue.pop()
+            if id(scope.node) in self.reached:
+                continue
+            self.reached[id(scope.node)] = (scope, why)
+            body = scope.node.body if isinstance(scope.node.body, list) \
+                else [scope.node.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Call):
+                        tgt = self._resolve(node.func, scope.sf, scope)
+                        if tgt is not None:
+                            queue.append(
+                                (tgt, f"called from jit scope "
+                                      f"{scope.qualname}"))
+
+    def jit_scopes(self) -> Iterable[Tuple[FuncScope, str]]:
+        return self.reached.values()

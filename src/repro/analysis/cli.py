@@ -1,0 +1,85 @@
+"""jzlint command line: ``python -m repro.analysis src/ [options]``.
+
+Exit codes (CI contract):
+  0 — no unsuppressed, unbaselined findings
+  1 — findings present
+  2 — usage / internal error
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis.core import RULES, Analyzer, Project, make_rules
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jzlint: static contract checks for the engine's "
+                    "device/host discipline (DESIGN.md §8)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help="JSON baseline of grandfathered findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current findings into --baseline and "
+                         "exit 0")
+    ap.add_argument("--tests", default=None,
+                    help="test directory for cross-reference rules "
+                         "(default: auto-discover a sibling tests/)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="include `# jz: allow`ed findings in text "
+                         "output")
+    ap.add_argument("--list-rules", action="store_true")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule in make_rules():
+            print(f"{rule.id}  {rule.title}")
+        return 0
+    rules = [r.strip() for r in args.rules.split(",")] \
+        if args.rules else None
+    try:
+        paths = [Path(p) for p in (args.paths or ["src"])]
+        missing = [p for p in paths if not p.exists()]
+        if missing:
+            print(f"jzlint: no such path(s): "
+                  f"{', '.join(map(str, missing))}", file=sys.stderr)
+            return 2
+        project = Project(paths, tests=args.tests)
+        analyzer = Analyzer(rules)
+        if args.write_baseline:
+            if not args.baseline:
+                print("jzlint: --write-baseline requires --baseline",
+                      file=sys.stderr)
+                return 2
+            report = analyzer.run(project)
+            n = write_baseline(report, args.baseline)
+            print(f"jzlint: wrote {n} baseline entr"
+                  f"{'y' if n == 1 else 'ies'} to {args.baseline}")
+            return 0
+        baseline = load_baseline(args.baseline) if args.baseline else None
+        report = analyzer.run(project, baseline=baseline)
+    except ValueError as e:                       # unknown rule ids etc.
+        print(f"jzlint: {e}", file=sys.stderr)
+        return 2
+    if args.format == "json":
+        print(json.dumps(report.to_json(), indent=1))
+    else:
+        print(report.render_text(show_suppressed=args.show_suppressed))
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

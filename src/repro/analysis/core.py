@@ -1,0 +1,340 @@
+"""The jzlint analyzer frame (DESIGN.md §8).
+
+JingZhao's shape applied to our own toolchain: a *fixed analyzer frame*
+(file loading, suppression parsing, baseline filtering, reporting) with
+*pluggable checker rules* behind a name registry — exactly the pattern
+`serve/api.py` uses for engine subsystems. A rule is a class with an
+``id``/``title`` and a ``check(project) -> findings`` method, registered
+with ``@register_rule("JZ00x", "...")``; adding a contract check is a
+plug-in, not an analyzer edit.
+
+The frame owns the policy-free machinery:
+
+  * ``Project``     — the parsed file set (ASTs, module names, per-line
+                      suppression comments) plus the sibling ``tests/``
+                      tree some rules cross-reference,
+  * ``Analyzer``    — runs every (selected) rule, dedupes findings,
+                      marks suppressed ones (``# jz: allow[JZ00x] why``),
+  * ``Report``      — the finding list with text/JSON renderers.
+
+Rules never read files or parse comments themselves; they consume the
+``Project`` and emit ``Finding``s. Suppression and baseline policy stay
+in the frame so every rule inherits them for free.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import (Callable, Dict, Iterable, List, Optional, Protocol,
+                    Sequence, Tuple, Type)
+
+# --------------------------------------------------------------------------
+# findings
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One contract violation at a source location."""
+    rule: str                     # "JZ001"
+    path: str                     # posix path relative to the scan root
+    line: int                     # 1-based
+    col: int
+    message: str
+    suppressed: bool = False
+    suppress_reason: str = ""
+
+    @property
+    def key(self) -> Tuple[str, str, int]:
+        """Baseline identity: rule + file + line (messages may carry
+        volatile detail; lines are stable enough for grandfathering)."""
+        return (self.rule, self.path, self.line)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "suppressed": self.suppressed,
+                "suppress_reason": self.suppress_reason}
+
+    def render(self) -> str:
+        tag = f"  [allowed: {self.suppress_reason or 'no reason given'}]" \
+            if self.suppressed else ""
+        return f"{self.path}:{self.line}:{self.col} {self.rule} " \
+               f"{self.message}{tag}"
+
+
+# --------------------------------------------------------------------------
+# source files + suppressions
+# --------------------------------------------------------------------------
+
+# `# jz: allow[JZ001] reason...` — trailing on the flagged line, or on a
+# standalone comment line immediately above it.
+_ALLOW_RE = re.compile(
+    r"#\s*jz:\s*allow\[\s*([A-Za-z0-9_,\s]+?)\s*\]\s*(.*?)\s*$")
+
+
+@dataclass
+class SourceFile:
+    path: Path                    # absolute
+    rel: str                      # posix, relative to the scan root
+    module: str                   # dotted module name ("" if underivable)
+    source: str
+    tree: ast.Module
+    # line -> [(rule_id, reason)]
+    suppressions: Dict[int, List[Tuple[str, str]]] = field(
+        default_factory=dict)
+
+    def suppression_for(self, rule: str, line: int) -> Optional[str]:
+        """The reason string if `rule` is allowed on `line`, else None."""
+        for rid, reason in self.suppressions.get(line, ()):
+            if rid == rule:
+                return reason
+        return None
+
+
+def _parse_suppressions(source: str) -> Dict[int, List[Tuple[str, str]]]:
+    out: Dict[int, List[Tuple[str, str]]] = {}
+    lines = source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        entries = [(rid.strip(), m.group(2).strip())
+                   for rid in m.group(1).split(",") if rid.strip()]
+        before = text[:m.start()].rstrip()
+        if before.endswith("#") or not before.strip("# \t"):
+            # standalone comment line: covers the next line
+            out.setdefault(i + 1, []).extend(entries)
+        out.setdefault(i, []).extend(entries)
+    return out
+
+
+def _derive_module(path: Path, root: Path) -> str:
+    """Dotted module name for import resolution.
+
+    Anchors on a `src/` layout (or a `repro` package dir) when present so
+    `src/repro/models/lm.py -> repro.models.lm` matches how the codebase
+    imports itself; otherwise falls back to the path relative to the scan
+    root (fixture trees: `kernels/foo.py -> kernels.foo`).
+    """
+    parts = list(path.parts)
+    if "src" in parts:
+        parts = parts[len(parts) - parts[::-1].index("src"):]
+    elif "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    else:
+        try:
+            parts = list(path.relative_to(root).parts)
+        except ValueError:
+            parts = [path.name]
+    if not parts:
+        return ""
+    parts[-1] = parts[-1][:-3] if parts[-1].endswith(".py") else parts[-1]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(p for p in parts if p)
+
+
+def _load_file(path: Path, root: Path) -> Optional[SourceFile]:
+    try:
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None                  # unparseable files are not lintable
+    try:
+        rel = path.relative_to(root).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return SourceFile(path=path, rel=rel, module=_derive_module(path, root),
+                      source=source, tree=tree,
+                      suppressions=_parse_suppressions(source))
+
+
+def _iter_py(path: Path) -> Iterable[Path]:
+    if path.is_file():
+        if path.suffix == ".py":
+            yield path
+        return
+    for p in sorted(path.rglob("*.py")):
+        if "__pycache__" in p.parts or any(
+                part.startswith(".") for part in p.parts):
+            continue
+        yield p
+
+
+class Project:
+    """The analyzed file set: parsed sources plus the sibling test tree
+    (JZ004 cross-references tests; they are never linted themselves)."""
+
+    def __init__(self, paths: Sequence, tests: Optional[Path] = None,
+                 root: Optional[Path] = None):
+        paths = [Path(p).resolve() for p in paths]
+        self.root = (Path(root).resolve() if root is not None
+                     else self._common_root(paths))
+        self.files: List[SourceFile] = []
+        seen = set()
+        for p in paths:
+            for f in _iter_py(p):
+                if f in seen:
+                    continue
+                seen.add(f)
+                sf = _load_file(f, self.root)
+                if sf is not None:
+                    self.files.append(sf)
+        self.modules: Dict[str, SourceFile] = {
+            f.module: f for f in self.files if f.module}
+        tests_dir = Path(tests).resolve() if tests else \
+            self._discover_tests(paths)
+        self.tests: List[SourceFile] = []
+        if tests_dir is not None and tests_dir.is_dir():
+            self.tests = [sf for f in _iter_py(tests_dir)
+                          if (sf := _load_file(f, self.root)) is not None]
+
+    @staticmethod
+    def _common_root(paths: Sequence[Path]) -> Path:
+        if not paths:
+            return Path.cwd()
+        first = paths[0] if paths[0].is_dir() else paths[0].parent
+        root = first
+        for p in paths[1:]:
+            p = p if p.is_dir() else p.parent
+            while root not in (*p.parents, p):
+                root = root.parent
+        return root
+
+    @staticmethod
+    def _discover_tests(paths: Sequence[Path]) -> Optional[Path]:
+        for p in paths:
+            base = p if p.is_dir() else p.parent
+            for cand in (base / "tests", base.parent / "tests"):
+                if cand.is_dir():
+                    return cand
+        return None
+
+    def in_dir(self, name: str) -> List[SourceFile]:
+        """Scanned files living under a directory called `name`
+        (e.g. "serve", "kernels", "launch") anywhere in their path."""
+        return [f for f in self.files
+                if name in Path(f.rel).parts[:-1]]
+
+
+# --------------------------------------------------------------------------
+# rule registry — checkers plug into the fixed frame by id
+# --------------------------------------------------------------------------
+
+
+class Rule(Protocol):
+    """A pluggable contract checker. `check` walks the project and
+    yields raw findings; the frame applies suppressions/baseline."""
+    id: str
+    title: str
+
+    def check(self, project: Project) -> Iterable[Finding]: ...
+
+
+RULES: Dict[str, Type] = {}
+
+
+def register_rule(rule_id: str, title: str) -> Callable[[Type], Type]:
+    def deco(cls: Type) -> Type:
+        cls.id = rule_id
+        cls.title = title
+        RULES[rule_id] = cls
+        return cls
+    return deco
+
+
+def make_rules(only: Optional[Sequence[str]] = None) -> List[Rule]:
+    # import registers the built-ins, mirroring make_scheduler & co.
+    from repro.analysis import (rules_oracle, rules_registry,  # noqa: F401
+                                rules_sync, rules_trace)
+    ids = sorted(RULES) if only is None else list(only)
+    unknown = [i for i in ids if i not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule(s) {unknown}; "
+                         f"registered: {sorted(RULES)}")
+    return [RULES[i]() for i in ids]
+
+
+# --------------------------------------------------------------------------
+# the analyzer frame
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Report:
+    findings: List[Finding]
+    n_files: int
+    baselined: List[Finding] = field(default_factory=list)
+
+    @property
+    def unsuppressed(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def suppressed(self) -> List[Finding]:
+        return [f for f in self.findings if f.suppressed]
+
+    @property
+    def clean(self) -> bool:
+        return not self.unsuppressed
+
+    def to_json(self) -> dict:
+        return {
+            "findings": [f.to_json() for f in self.findings],
+            "baselined": [f.to_json() for f in self.baselined],
+            "counts": {"files": self.n_files,
+                       "findings": len(self.unsuppressed),
+                       "suppressed": len(self.suppressed),
+                       "baselined": len(self.baselined)},
+        }
+
+    def render_text(self, show_suppressed: bool = False) -> str:
+        shown = self.findings if show_suppressed else self.unsuppressed
+        lines = [f.render() for f in shown]
+        lines.append(
+            f"jzlint: {len(self.unsuppressed)} finding(s) "
+            f"({len(self.suppressed)} suppressed, "
+            f"{len(self.baselined)} baselined) across {self.n_files} files")
+        return "\n".join(lines)
+
+
+class Analyzer:
+    """The fixed frame: run the pluggable rules, dedupe, apply inline
+    suppressions and the grandfathered-findings baseline."""
+
+    def __init__(self, rules: Optional[Sequence[str]] = None):
+        self.rules = make_rules(rules)
+
+    def run(self, project: Project,
+            baseline: Optional[set] = None) -> Report:
+        by_rel = {f.rel: f for f in project.files}
+        seen = set()
+        findings: List[Finding] = []
+        for rule in self.rules:
+            for f in rule.check(project):
+                dedup = (f.rule, f.path, f.line, f.col, f.message)
+                if dedup in seen:
+                    continue
+                seen.add(dedup)
+                sf = by_rel.get(f.path)
+                if sf is not None:
+                    reason = sf.suppression_for(f.rule, f.line)
+                    if reason is not None:
+                        f = replace(f, suppressed=True,
+                                    suppress_reason=reason)
+                findings.append(f)
+        findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+        baselined: List[Finding] = []
+        if baseline:
+            kept = []
+            for f in findings:
+                if not f.suppressed and f.key in baseline:
+                    baselined.append(f)
+                else:
+                    kept.append(f)
+            findings = kept
+        return Report(findings=findings, n_files=len(project.files),
+                      baselined=baselined)

@@ -1,0 +1,157 @@
+"""JZ004 — every Pallas kernel pairs with a `ref.py` oracle and a test.
+
+The repo's kernel contract (DESIGN.md §4, ROADMAP item 3): a Pallas
+kernel is only trustworthy next to a deliberately-naive pure-jnp oracle
+in `kernels/ref.py`, with an interpret-mode test asserting equivalence.
+This rule makes the convention machine-checked:
+
+For every ``pl.pallas_call`` site in a module under a ``kernels/``
+directory:
+
+1. the sibling ``kernels/ref.py`` must exist,
+2. the module must expose a public entry point ``F`` whose name pairs
+   with an oracle stem ``S`` (``S_ref`` defined in ref.py, with
+   ``F == S`` or ``F`` starting with ``S_`` — so `wkv6_chunked` pairs
+   with `wkv6_ref`),
+3. some test module must exercise the pair: it imports the kernels
+   package's ``ref`` (or the kernel/ops module) and references both
+   ``S_ref`` and ``F``.
+
+Granularity is per-module: a private grid body (`_fa_kernel`) is
+covered by its public wrapper's pairing.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import dotted, import_map
+from repro.analysis.core import Finding, Project, SourceFile, register_rule
+
+
+def _pallas_sites(sf: SourceFile) -> List[ast.Call]:
+    imp = import_map(sf.tree)
+    out = []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func, imp)
+            if d and d.split(".")[-1] == "pallas_call":
+                out.append(node)
+    return out
+
+
+def _public_functions(sf: SourceFile) -> List[str]:
+    return [n.name for n in sf.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and not n.name.startswith("_")]
+
+
+def _ref_stems(ref_sf: SourceFile) -> Set[str]:
+    return {n.name[:-len("_ref")] for n in ref_sf.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n.name.endswith("_ref")}
+
+
+def _pair(fn: str, stems: Set[str]) -> Optional[str]:
+    for s in sorted(stems, key=len, reverse=True):
+        if fn == s or fn.startswith(s + "_"):
+            return s
+    return None
+
+
+def _identifiers(sf: SourceFile) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+    return out
+
+
+def _imports_ref(sf: SourceFile) -> bool:
+    """Does this test module import a kernels `ref` module (directly,
+    or via `from <pkg>.kernels import ref` / `import <pkg>.kernels.ref`)?"""
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            if node.module.endswith(".ref") or node.module == "ref":
+                return True
+            if any(a.name == "ref" for a in node.names):
+                return True
+        elif isinstance(node, ast.Import):
+            if any(a.name.endswith(".ref") or a.name == "ref"
+                   for a in node.names):
+                return True
+    return False
+
+
+@register_rule(
+    "JZ004",
+    "every pl.pallas_call in kernels/ pairs with a kernels/ref.py "
+    "oracle and a test importing both")
+class KernelOracleRule:
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        kernel_files = [f for f in project.in_dir("kernels")
+                        if Path(f.rel).name != "ref.py"]
+        test_ids = [(_identifiers(t), _imports_ref(t))
+                    for t in project.tests]
+        for sf in kernel_files:
+            sites = _pallas_sites(sf)
+            if not sites:
+                continue
+            ref_sf = self._sibling_ref(project, sf)
+            if ref_sf is None:
+                for site in sites:
+                    yield self._finding(
+                        sf, site,
+                        "pl.pallas_call with no sibling kernels/ref.py "
+                        "— every Pallas kernel needs a pure-jnp oracle")
+                continue
+            stems = _ref_stems(ref_sf)
+            paired = [(fn, _pair(fn, stems))
+                      for fn in _public_functions(sf)]
+            matches = [(fn, s) for fn, s in paired if s is not None]
+            if not matches:
+                for site in sites:
+                    yield self._finding(
+                        sf, site,
+                        f"no `*_ref` oracle in {ref_sf.rel} pairs with "
+                        f"this module's public entry points "
+                        f"{_public_functions(sf)} — add a naive oracle "
+                        f"named after the kernel")
+                continue
+            if project.tests and not self._tested(matches, test_ids):
+                for site in sites:
+                    yield self._finding(
+                        sf, site,
+                        f"kernel/oracle pair "
+                        f"{[f'{fn}~{s}_ref' for fn, s in matches]} has "
+                        f"no test importing both the kernel and the "
+                        f"ref oracle")
+
+    @staticmethod
+    def _sibling_ref(project: Project,
+                     sf: SourceFile) -> Optional[SourceFile]:
+        want = (Path(sf.rel).parent / "ref.py").as_posix()
+        for f in project.files:
+            if f.rel == want:
+                return f
+        return None
+
+    @staticmethod
+    def _tested(matches: List[Tuple[str, str]],
+                test_ids: List[Tuple[Set[str], bool]]) -> bool:
+        for ids, has_ref in test_ids:
+            if not has_ref:
+                continue
+            for fn, stem in matches:
+                if fn in ids and f"{stem}_ref" in ids:
+                    return True
+        return False
+
+    def _finding(self, sf: SourceFile, node: ast.AST,
+                 msg: str) -> Finding:
+        return Finding(rule=self.id, path=sf.rel, line=node.lineno,
+                       col=node.col_offset, message=msg)

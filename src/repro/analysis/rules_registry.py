@@ -1,0 +1,255 @@
+"""JZ005 — classes registered into a subsystem registry structurally
+satisfy the corresponding Protocol.
+
+`serve/api.py` defines the engine's five subsystem Protocols and their
+`register_*` name registries. A third-party subsystem that misses a
+method fails deep inside the engine loop at runtime; this rule (and its
+runtime mirror inside the register decorators themselves) moves that
+failure to lint/registration time.
+
+Discovery is by convention, so fixture trees and future registries work
+unmodified: any ``class P(Protocol)`` in the scanned set is a contract;
+any class decorated ``@register_<snake>(...)`` must satisfy the
+protocol whose camel-case name snake-cases to ``<snake>``
+(``register_kv_backend`` -> ``KVBackend``). Conformance is checked over
+the class's *static* member set, resolved through base classes in the
+scanned tree: methods (def or class-level alias assignment), properties,
+and data attributes (class-level or any ``self.X = ...``). Method
+signatures are checked for positional-arity compatibility with the
+protocol's declaration.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import dotted, import_map
+from repro.analysis.core import Finding, Project, SourceFile, register_rule
+
+_SNAKE_RE = re.compile(r"(?<!^)(?=[A-Z][a-z])|(?<=[a-z0-9])(?=[A-Z])")
+
+
+def _snake(name: str) -> str:
+    return _SNAKE_RE.sub("_", name).lower()
+
+
+class _ProtoMember:
+    def __init__(self, kind: str, args: Optional[List[str]] = None,
+                 n_defaults: int = 0):
+        self.kind = kind              # "method" | "property" | "attr"
+        self.args = args or []        # positional params after self
+        self.n_defaults = n_defaults
+
+
+def _is_protocol(cls: ast.ClassDef) -> bool:
+    for b in cls.bases:
+        if isinstance(b, ast.Name) and b.id == "Protocol":
+            return True
+        if isinstance(b, ast.Attribute) and b.attr == "Protocol":
+            return True
+        if isinstance(b, ast.Subscript):
+            v = b.value
+            if (isinstance(v, ast.Name) and v.id == "Protocol") or \
+                    (isinstance(v, ast.Attribute) and v.attr == "Protocol"):
+                return True
+    return False
+
+
+def _has_property_deco(fn) -> bool:
+    return any((isinstance(d, ast.Name) and d.id == "property")
+               or (isinstance(d, ast.Attribute) and d.attr == "property")
+               for d in fn.decorator_list)
+
+
+def _protocol_members(cls: ast.ClassDef) -> Dict[str, _ProtoMember]:
+    out: Dict[str, _ProtoMember] = {}
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name.startswith("_"):
+                continue
+            if _has_property_deco(node):
+                out[node.name] = _ProtoMember("property")
+            else:
+                args = [a.arg for a in node.args.args[1:]]
+                out[node.name] = _ProtoMember(
+                    "method", args, len(node.args.defaults))
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name) and not \
+                node.target.id.startswith("_"):
+            out[node.target.id] = _ProtoMember("attr")
+    return out
+
+
+class _ImplMember:
+    def __init__(self, kind: str, node=None):
+        self.kind = kind              # "method" | "property" | "attr"
+        self.node = node              # FunctionDef for kind == "method"
+
+
+def _class_members(cls: ast.ClassDef) -> Dict[str, _ImplMember]:
+    out: Dict[str, _ImplMember] = {}
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            kind = "property" if _has_property_deco(node) else "method"
+            out[node.name] = _ImplMember(kind, node)
+            for sub in ast.walk(node):      # self.X = ... anywhere
+                if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                    tgts = sub.targets if isinstance(sub, ast.Assign) \
+                        else [sub.target]
+                    for t in tgts:
+                        if isinstance(t, ast.Attribute) and isinstance(
+                                t.value, ast.Name) and t.value.id == "self":
+                            out.setdefault(t.attr, _ImplMember("attr"))
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    # class-level alias (`requeue = submit`) or constant
+                    out.setdefault(t.id, _ImplMember("attr"))
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name) and node.value is not None:
+            out.setdefault(node.target.id, _ImplMember("attr"))
+    return out
+
+
+@register_rule(
+    "JZ005",
+    "classes passed to register_* structurally satisfy the matching "
+    "subsystem Protocol")
+class RegistryConformanceRule:
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        # all protocols and all classes in the scanned tree, by name
+        protos: Dict[str, ast.ClassDef] = {}
+        classes: Dict[str, List[Tuple[ast.ClassDef, SourceFile]]] = {}
+        for sf in project.files:
+            for node in sf.tree.body:
+                if isinstance(node, ast.ClassDef):
+                    if _is_protocol(node):
+                        protos[node.name] = node
+                    classes.setdefault(node.name, []).append((node, sf))
+        if not protos:
+            return
+        by_snake = {_snake(n): n for n in protos}
+        credited = self._decorator_credits(project)
+        for sf in project.files:
+            imp = import_map(sf.tree)
+            for node in sf.tree.body:
+                if not isinstance(node, ast.ClassDef):
+                    continue
+                for deco in node.decorator_list:
+                    if not isinstance(deco, ast.Call):
+                        continue
+                    d = dotted(deco.func, imp) or ""
+                    tail = d.split(".")[-1]
+                    if not tail.startswith("register_"):
+                        continue
+                    proto_name = by_snake.get(tail[len("register_"):])
+                    if proto_name is None:
+                        continue
+                    yield from self._check_class(
+                        node, sf, protos[proto_name], proto_name,
+                        classes, imp, credited.get(tail, set()))
+
+    @staticmethod
+    def _decorator_credits(project: Project) -> Dict[str, Set[str]]:
+        """register function name -> attrs it assigns onto the class
+        (`cls.name = name` in serve/api.py, `cls.id`/`cls.title` in
+        analysis/core.py): the decorator provides these members, so the
+        registered class need not declare them."""
+        out: Dict[str, Set[str]] = {}
+        for sf in project.files:
+            for node in sf.tree.body:
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if not node.name.startswith("register_"):
+                    continue
+                attrs = {t.attr for sub in ast.walk(node)
+                         if isinstance(sub, ast.Assign)
+                         for t in sub.targets
+                         if isinstance(t, ast.Attribute)
+                         and isinstance(t.value, ast.Name)}
+                out.setdefault(node.name, set()).update(attrs)
+        return out
+
+    # -- conformance ----------------------------------------------------
+    def _check_class(self, cls: ast.ClassDef, sf: SourceFile,
+                     proto: ast.ClassDef, proto_name: str,
+                     classes, imp,
+                     credited: Set[str] = frozenset()
+                     ) -> Iterable[Finding]:
+        required = _protocol_members(proto)
+        members = self._resolved_members(cls, sf, classes, imp)
+        for attr in credited:
+            members.setdefault(attr, _ImplMember("attr"))
+        for name, want in sorted(required.items()):
+            have = members.get(name)
+            if have is None:
+                yield Finding(
+                    rule=self.id, path=sf.rel, line=cls.lineno,
+                    col=cls.col_offset,
+                    message=f"class `{cls.name}` registered against "
+                            f"`{proto_name}` is missing "
+                            f"{want.kind} `{name}`")
+                continue
+            if want.kind == "method" and have.kind == "method" \
+                    and have.node is not None:
+                err = self._sig_mismatch(want, have.node)
+                if err:
+                    yield Finding(
+                        rule=self.id, path=sf.rel,
+                        line=have.node.lineno, col=have.node.col_offset,
+                        message=f"`{cls.name}.{name}` signature is not "
+                                f"call-compatible with "
+                                f"`{proto_name}.{name}`: {err}")
+
+    def _resolved_members(self, cls: ast.ClassDef, sf: SourceFile,
+                          classes, imp,
+                          seen: Optional[Set[int]] = None
+                          ) -> Dict[str, _ImplMember]:
+        """The class's member set, merged through statically resolvable
+        base classes (same module, or same-name class in the scanned
+        tree via an import)."""
+        seen = seen if seen is not None else set()
+        if id(cls) in seen:
+            return {}
+        seen.add(id(cls))
+        members = _class_members(cls)
+        for base in cls.bases:
+            base_name = None
+            if isinstance(base, ast.Name):
+                base_name = base.id
+            elif isinstance(base, ast.Attribute):
+                base_name = base.attr
+            if base_name is None or base_name not in classes:
+                continue
+            for bcls, bsf in classes[base_name]:
+                if bcls is cls:
+                    continue
+                inherited = self._resolved_members(
+                    bcls, bsf, classes, imp, seen)
+                for k, v in inherited.items():
+                    members.setdefault(k, v)
+        return members
+
+    @staticmethod
+    def _sig_mismatch(want: _ProtoMember, fn) -> Optional[str]:
+        """Positional-arity compatibility with the protocol's call
+        shape. Names are not compared — positional callers only care
+        about arity; extra implementation params must carry defaults."""
+        if fn.args.vararg is not None:
+            return None
+        impl = [a.arg for a in fn.args.args[1:]]
+        n_def = len(fn.args.defaults)
+        lo = len(impl) - n_def                 # required positionals
+        hi = len(impl)
+        want_lo = len(want.args) - want.n_defaults
+        if want_lo < lo:
+            return (f"protocol passes as few as {want_lo} positional "
+                    f"arg(s) but the implementation requires {lo}")
+        if len(want.args) > hi and fn.args.kwarg is None:
+            return (f"protocol declares {len(want.args)} positional "
+                    f"arg(s) {want.args} but the implementation "
+                    f"accepts at most {hi}")
+        return None

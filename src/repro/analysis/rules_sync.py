@@ -1,0 +1,148 @@
+"""JZ001 (host-sync funnel) and JZ003 (injected clock).
+
+Both rules guard the serving engine's *host discipline*:
+
+* JZ001 — the engine's one performance contract is
+  ``host_syncs == prefills + decode_spans``: every blocking
+  device->host read funnels through ``ServingEngine._host_sync`` so the
+  counter is the true round-trip count. Any other ``jax.device_get``,
+  ``.block_until_ready()``, ``.item()``, or ``int()/float()/bool()``
+  coercion of a jax-namespace expression under ``serve/`` is an
+  unaccounted sync that silently breaks the span-amortization math.
+
+* JZ003 — PR 6 threaded ONE time source (``EngineConfig.clock``)
+  through engine, transport, and frontend so virtual-clock replay is
+  bitwise deterministic. Any wall-clock *reference* under ``serve/``
+  (time.time / time.monotonic / time.perf_counter) outside the two
+  explicitly-allowed injection defaults re-opens the nondeterminism
+  hole; under ``launch/`` wall-clock *calls* must route through the
+  injectable ``repro.core.timing.Timer`` instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from repro.analysis.callgraph import dotted, import_map, mentions_device_ns
+from repro.analysis.core import (Finding, Project, SourceFile,
+                                 register_rule)
+
+_SYNC_FUNNEL = "_host_sync"
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+}
+
+
+def _enclosing_names(stack: List[ast.AST]) -> List[str]:
+    return [n.name for n in stack
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+@register_rule(
+    "JZ001",
+    "blocking device reads in serve/ must funnel through "
+    "ServingEngine._host_sync")
+class HostSyncFunnelRule:
+    """Flags unaccounted device->host transfers under serve/."""
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for sf in project.in_dir("serve"):
+            yield from self._check_file(sf, import_map(sf.tree))
+
+    def _check_file(self, sf: SourceFile, imp) -> Iterable[Finding]:
+        stack: List[ast.AST] = []
+
+        def visit(node: ast.AST):
+            is_fn = isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            if is_fn:
+                stack.append(node)
+            yield from check(node)
+            for child in ast.iter_child_nodes(node):
+                yield from visit(child)
+            if is_fn:
+                stack.pop()
+
+        def inside_funnel() -> bool:
+            return _SYNC_FUNNEL in _enclosing_names(stack)
+
+        def check(node: ast.AST):
+            if not isinstance(node, ast.Call):
+                return
+            d = dotted(node.func, imp)
+            if d and d.split(".")[-1] == "device_get" \
+                    and not inside_funnel():
+                yield self._finding(sf, node,
+                                    f"`{d}` outside the _host_sync funnel "
+                                    f"— an unaccounted blocking "
+                                    f"device->host sync")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "block_until_ready" \
+                    and not inside_funnel():
+                yield self._finding(sf, node,
+                                    "`.block_until_ready()` outside the "
+                                    "_host_sync funnel — an unaccounted "
+                                    "blocking device wait")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args \
+                    and not inside_funnel():
+                yield self._finding(sf, node,
+                                    "`.item()` outside the _host_sync "
+                                    "funnel — an unaccounted blocking "
+                                    "scalar transfer")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("int", "float", "bool") \
+                    and node.args \
+                    and mentions_device_ns(node.args[0], imp) \
+                    and not inside_funnel():
+                yield self._finding(
+                    sf, node,
+                    f"`{node.func.id}(...)` coerces a jax expression to "
+                    f"host — an unaccounted blocking sync; transfer "
+                    f"through _host_sync first")
+
+        yield from visit(sf.tree)
+
+    def _finding(self, sf: SourceFile, node: ast.AST,
+                 msg: str) -> Finding:
+        return Finding(rule=self.id, path=sf.rel, line=node.lineno,
+                       col=node.col_offset, message=msg)
+
+
+@register_rule(
+    "JZ003",
+    "one injected time source: no wall-clock reads outside the "
+    "EngineConfig.clock / Timer plumbing")
+class InjectedClockRule:
+    """serve/: ANY wall-clock reference flags (the injection defaults
+    carry explicit `# jz: allow` markers — they are the documented
+    plumbing). launch/: wall-clock *calls* flag; references passed as
+    clock defaults stay legal."""
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for sf in project.in_dir("serve"):
+            imp = import_map(sf.tree)
+            for node in ast.walk(sf.tree):
+                if isinstance(node, (ast.Attribute, ast.Name)):
+                    d = dotted(node, imp)
+                    if d in _WALL_CLOCK:
+                        yield Finding(
+                            rule=self.id, path=sf.rel, line=node.lineno,
+                            col=node.col_offset,
+                            message=f"wall-clock reference `{d}` in "
+                                    f"serve/ — the engine reads time "
+                                    f"only through the injected "
+                                    f"EngineConfig.clock")
+        for sf in project.in_dir("launch"):
+            imp = import_map(sf.tree)
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Call):
+                    d = dotted(node.func, imp)
+                    if d in _WALL_CLOCK:
+                        yield Finding(
+                            rule=self.id, path=sf.rel, line=node.lineno,
+                            col=node.col_offset,
+                            message=f"wall-clock call `{d}()` in launch/ "
+                                    f"— route timing through the "
+                                    f"injectable repro.core.timing.Timer")

@@ -1,0 +1,175 @@
+"""JZ002 — trace purity inside jit scopes.
+
+A function traced by jax (jit-compiled, a Pallas kernel body, or a
+`lax.scan`/`while_loop` body) runs ONCE at trace time; host side effects
+inside it silently bake stale values into the compiled program or fire
+at the wrong cadence. Inside every jit scope found by the call-graph
+walk (callgraph.JitGraph), flag:
+
+* wall-clock reads (`time.time` & friends) — traced once, frozen,
+* global RNG (`np.random.*`, stdlib `random.*`) — invisible to jax's
+  key threading, breaks the PR 5 determinism contract,
+* `print(...)` — fires at trace time, not per step (use
+  `jax.debug.print` if needed),
+* mutation of closed-over/global state (`nonlocal`/`global` rebinding,
+  stores into names bound outside every enclosing function, mutating
+  method calls on such names) — trace-time writes the compiled program
+  never repeats.
+
+Resolution is conservative (see callgraph.py): only statically
+resolvable callees are walked, and names bound anywhere in the lexical
+function chain count as local, so accumulator patterns *within* a jit
+scope never false-positive.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.callgraph import (FuncNode, FuncScope, JitGraph,
+                                      dotted, import_map)
+from repro.analysis.core import Finding, Project, register_rule
+
+_WALL_CLOCK_TAILS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+}
+
+_MUTATORS = {"append", "extend", "insert", "add", "update", "pop",
+             "remove", "clear", "setdefault", "popitem", "discard",
+             "appendleft", "write"}
+
+
+def _bound_names(fn: ast.AST) -> Set[str]:
+    """Every name bound inside `fn`: parameters, assignment targets,
+    loop/with/except/comprehension targets, nested def/class names."""
+    out: Set[str] = set()
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+            out.add(a.arg)
+        if args.vararg:
+            out.add(args.vararg.arg)
+        if args.kwarg:
+            out.add(args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, FuncNode) and node is not fn:
+            inner = getattr(node, "args", None)
+            if inner is not None:
+                for a in (*inner.posonlyargs, *inner.args,
+                          *inner.kwonlyargs):
+                    out.add(a.arg)
+    return out
+
+
+def _chain_locals(scope: FuncScope) -> Set[str]:
+    """Names local to the scope OR any lexically enclosing function —
+    mutating an enclosing trace-local accumulator is the enclosing jit
+    scope's business, not module-global state."""
+    out: Set[str] = set()
+    s: Optional[FuncScope] = scope
+    while s is not None:
+        out |= _bound_names(s.node)
+        s = s.parent
+    return out
+
+
+def _base_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+@register_rule(
+    "JZ002",
+    "jit scopes (jitted fns, Pallas kernels, scan/while bodies + their "
+    "callees) must be trace-pure")
+class TracePurityRule:
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        graph = JitGraph(project)
+        for scope, why in graph.jit_scopes():
+            yield from self._check_scope(scope, why, graph)
+
+    def _check_scope(self, scope: FuncScope, why: str,
+                     graph: JitGraph) -> Iterable[Finding]:
+        sf = scope.sf
+        imp = graph.imports[sf.rel]
+        local = _chain_locals(scope)
+        body = scope.node.body if isinstance(scope.node.body, list) \
+            else [scope.node.body]
+
+        def flag(node: ast.AST, msg: str) -> Finding:
+            return Finding(rule=self.id, path=sf.rel, line=node.lineno,
+                           col=node.col_offset,
+                           message=f"{msg} inside jit scope "
+                                   f"`{scope.qualname}` ({why})")
+
+        def walk(node):
+            """ast.walk, but nested functions that are jit scopes in
+            their own right are skipped — they report under their own
+            scope, not duplicated under every caller."""
+            yield node
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, FuncNode) and id(child) in \
+                        graph.reached:
+                    continue
+                yield from walk(child)
+
+        for stmt in body:
+            for node in walk(stmt):
+                if isinstance(node, ast.Call):
+                    d = dotted(node.func, imp)
+                    if d in _WALL_CLOCK_TAILS:
+                        yield flag(node, f"wall-clock read `{d}()` — "
+                                         f"traced once, frozen into the "
+                                         f"compiled program")
+                    elif d and (d.startswith("numpy.random.")
+                                or d.startswith("np.random.")
+                                or d.startswith("random.")):
+                        yield flag(node, f"global RNG `{d}()` — "
+                                         f"invisible to jax key "
+                                         f"threading, breaks replay "
+                                         f"determinism")
+                    elif d == "print":
+                        yield flag(node, "`print(...)` — fires at trace "
+                                         "time, not per step (use "
+                                         "jax.debug.print)")
+                    elif isinstance(node.func, ast.Attribute) \
+                            and node.func.attr in _MUTATORS:
+                        base = _base_name(node.func.value)
+                        if base is not None and base not in local \
+                                and base not in imp:
+                            yield flag(node,
+                                       f"`{base}.{node.func.attr}(...)` "
+                                       f"mutates closed-over/global "
+                                       f"state")
+                elif isinstance(node, ast.Nonlocal):
+                    yield flag(node, f"`nonlocal "
+                                     f"{', '.join(node.names)}` — "
+                                     f"rebinds enclosing state from "
+                                     f"traced code")
+                elif isinstance(node, ast.Global):
+                    yield flag(node, f"`global {', '.join(node.names)}` "
+                                     f"— rebinds module state from "
+                                     f"traced code")
+                elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = node.targets if isinstance(
+                        node, ast.Assign) else [node.target]
+                    for t in targets:
+                        if isinstance(t, (ast.Subscript, ast.Attribute)):
+                            base = _base_name(t)
+                            if base is not None and base not in local \
+                                    and base not in imp \
+                                    and base != "self":
+                                yield flag(
+                                    t, f"store into `{base}[...]`/"
+                                       f"`{base}.attr` mutates "
+                                       f"closed-over/global state")

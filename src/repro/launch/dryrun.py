@@ -19,7 +19,6 @@ Usage:
 """
 import argparse
 import json
-import time
 import traceback
 from pathlib import Path
 
@@ -27,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import CONFIGS, get_config
+from repro.core.timing import Timer
 from repro.configs.shapes import SHAPES_BY_NAME, applicable_shapes
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
@@ -91,7 +91,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              skip_analysis: bool = False, tag: str = "",
              policy_overrides=None) -> dict:
     from repro.launch import hlo_analysis
-    t0 = time.time()
+    timer = Timer()
     fn, args, mesh, cfg, shape = build_lowerable(
         arch, shape_name, multi_pod, policy_overrides)
     rec = {"arch": arch, "shape": shape_name,
@@ -99,9 +99,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
            "kind": shape.kind, "tag": tag}
     with mesh:
         lowered = fn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = timer.lap()
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = timer.lap()
         ma = compiled.memory_analysis()
         print(compiled.memory_analysis())
         ca = compiled.cost_analysis()

@@ -21,12 +21,12 @@ SLO-graded admission:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs.registry import ARCH_NAMES, get_config
+from repro.core.timing import DEFAULT_CLOCK, Timer
 from repro.models import lm
 from repro.serve.api import (EngineConfig, Request, SamplingParams,
                              default_page_budget, make_engine,
@@ -55,9 +55,9 @@ def _run_live(cfg, params, ecfg, sp, args):
                   print(f"  req {r.req_id} (qos {r.qos}) "
                         f"token[{idx}] = {tok}"))
                  for t, r in trace]
-    t0 = time.perf_counter()
+    timer = Timer()
     handles = fe.run(trace)
-    dt = time.perf_counter() - t0
+    dt = timer.elapsed()
     print(f"{len(handles)} arrivals over {fe.steps} steps in {dt:.1f}s  "
           f"[{args.arrival} @ {args.arrival_rate}/unit, "
           f"{ecfg.kv_layout} kv, {ecfg.scheduler} scheduler]")
@@ -174,7 +174,7 @@ def main():
         admit_capacity=args.admit_capacity,
         degrade_max_new=args.degrade_max_new,
         slo_ttft=tuple(args.slo_ttft), slo_tpot=tuple(args.slo_tpot),
-        clock=(time.perf_counter if args.real_time or not live
+        clock=(DEFAULT_CLOCK if args.real_time or not live
                else VirtualClock()))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed)
@@ -188,9 +188,9 @@ def main():
             size=int(rng.integers(8, 48))).astype(np.int32),
             max_new_tokens=args.max_new, qos=i % args.qos_classes,
             sampling=sp))
-    t0 = time.perf_counter()
+    timer = Timer()
     done = eng.run_until_done()
-    dt = time.perf_counter() - t0
+    dt = timer.elapsed()
     print(f"completed {len(done)}/{args.requests} in {dt:.1f}s  "
           f"({eng.stats['decode_tokens'] / dt:.1f} decode tok/s, "
           f"{eng.stats['host_syncs']} host syncs)  "

@@ -12,12 +12,12 @@ with the production mesh from mesh.py.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer, latest_step
+from repro.core.timing import Timer
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.data import DataConfig, SyntheticPackedDataset
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
@@ -73,7 +73,7 @@ def main():
             data.load_state_dict(meta["extra"].get("data", {"step": start}))
             print(f"resumed from step {start}")
 
-        t0 = time.time()
+        timer = Timer()
         for i in range(start, args.steps):
             toks, _ = data.next_batch()
             params, opt, metrics = step(params, opt, jnp.asarray(toks))
@@ -85,7 +85,7 @@ def main():
                 ckpt.save(i + 1, (params, opt),
                           extra={"data": data.state_dict()})
         ckpt.wait()
-        dt = time.time() - t0
+        dt = timer.elapsed()
         print(f"done: {args.steps - start} steps, "
               f"{(args.steps - start) * args.batch * args.seq / dt:.0f} tok/s")
 

@@ -30,6 +30,7 @@ from an `EngineConfig` and `make_frontend` a front end over it.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
@@ -113,8 +114,9 @@ class EngineConfig:
     # the ONE time source: arrival stamps, eviction tie-breaks, bus-timed
     # park/restore readiness and SLO accounting all read it, so tests and
     # benchmarks swap in a deterministic virtual clock (frontend.VirtualClock)
-    clock: Callable[[], float] = field(default=time.perf_counter,
-                                       repr=False, compare=False)
+    clock: Callable[[], float] = field(
+        default=time.perf_counter,  # jz: allow[JZ003] the injection point itself
+        repr=False, compare=False)
     # -- front-end admission control (DESIGN.md §3.8) -----------------
     admit_capacity: int = 64      # bounded front-end wait pool (all classes)
     feed_depth: int = 0           # engine-scheduler backlog the frontend
@@ -286,36 +288,86 @@ SAMPLERS: Dict[str, Type] = {}
 FRONTENDS: Dict[str, Type] = {}
 
 
-def register_scheduler(name: str) -> Callable[[Type], Type]:
-    def deco(cls: Type) -> Type:
-        cls.name = name
-        SCHEDULERS[name] = cls
-        return cls
-    return deco
+def _positional_shape(fn) -> Optional[Tuple[int, int]]:
+    """(min, max) positional arity after self/cls; max = -1 for *args.
+    None when the callable has no introspectable signature."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return None
+    params = list(sig.parameters.values())
+    pos = [p for p in params
+           if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    if pos and pos[0].name in ("self", "cls"):
+        pos = pos[1:]
+    required = sum(1 for p in pos if p.default is p.empty)
+    if any(p.kind == p.VAR_POSITIONAL for p in params):
+        return (required, -1)
+    return (required, len(pos))
 
 
-def register_kv_backend(name: str) -> Callable[[Type], Type]:
-    def deco(cls: Type) -> Type:
-        cls.name = name
-        KV_BACKENDS[name] = cls
-        return cls
-    return deco
+def _conformance_errors(cls: Type, proto: Type) -> List[str]:
+    """Structural check of `cls` against `proto`'s declared members.
+
+    The registration-time mirror of jzlint rule JZ005 (DESIGN.md §8):
+    methods and properties the Protocol body declares must exist on the
+    class with call-compatible positional arity. Annotation-only data
+    attrs (`n_classes`, `pool`, ...) are exempt — implementations set
+    those per-instance in `__init__`.
+    """
+    errors: List[str] = []
+    for pname, member in sorted(vars(proto).items()):
+        if pname.startswith("_"):
+            continue
+        if isinstance(member, property):
+            if not hasattr(cls, pname):
+                errors.append(f"missing property `{pname}`")
+        elif inspect.isfunction(member):
+            impl = getattr(cls, pname, None)
+            if impl is None:
+                errors.append(f"missing method `{pname}`")
+            elif not callable(impl):
+                errors.append(f"`{pname}` must be callable, got "
+                              f"{type(impl).__name__}")
+            else:
+                want = _positional_shape(member)
+                have = _positional_shape(impl)
+                if want is None or have is None:
+                    continue
+                if have[0] > want[0]:
+                    errors.append(
+                        f"`{pname}` requires {have[0]} positional "
+                        f"arg(s) but the protocol passes as few as "
+                        f"{want[0]}")
+                elif have[1] != -1 and have[1] < want[1]:
+                    errors.append(
+                        f"`{pname}` accepts at most {have[1]} "
+                        f"positional arg(s) but the protocol declares "
+                        f"{want[1]}")
+    return errors
 
 
-def register_sampler(name: str) -> Callable[[Type], Type]:
-    def deco(cls: Type) -> Type:
-        cls.name = name
-        SAMPLERS[name] = cls
-        return cls
-    return deco
+def _checked_register(kind: str, proto: Type, registry: Dict[str, Type]
+                      ) -> Callable[[str], Callable[[Type], Type]]:
+    def register(name: str) -> Callable[[Type], Type]:
+        def deco(cls: Type) -> Type:
+            errors = _conformance_errors(cls, proto)
+            if errors:
+                raise TypeError(
+                    f"cannot register {kind} {name!r}: class "
+                    f"`{cls.__name__}` does not satisfy "
+                    f"`{proto.__name__}`: " + "; ".join(errors))
+            cls.name = name
+            registry[name] = cls
+            return cls
+        return deco
+    return register
 
 
-def register_frontend(name: str) -> Callable[[Type], Type]:
-    def deco(cls: Type) -> Type:
-        cls.name = name
-        FRONTENDS[name] = cls
-        return cls
-    return deco
+register_scheduler = _checked_register("scheduler", Scheduler, SCHEDULERS)
+register_kv_backend = _checked_register("kv backend", KVBackend, KV_BACKENDS)
+register_sampler = _checked_register("sampler", Sampler, SAMPLERS)
+register_frontend = _checked_register("frontend", Frontend, FRONTENDS)
 
 
 def make_scheduler(name: str, n_classes: int = 4,

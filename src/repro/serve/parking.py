@@ -27,6 +27,7 @@ class HostParkingTransport:
     """
 
     def __init__(self, bus: Optional[BusModel] = None,
+                 # jz: allow[JZ003] default for the injected clock parameter
                  clock: Callable[[], float] = time.perf_counter):
         self.bus = bus or BusModel()
         self._clock = clock

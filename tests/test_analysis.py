@@ -1,0 +1,494 @@
+"""jzlint: the static contract checker (DESIGN.md §8).
+
+Each rule gets at least one fixture tree that must fire and one that
+must stay clean; the frame gets suppression/baseline round-trips; and
+the live repo gets a self-check (zero unsuppressed findings) plus a
+seeded-violation smoke test proving the linter would catch a real
+regression in the real engine source.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Analyzer, Finding, Project, RULES,
+                            load_baseline, register_rule, write_baseline)
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def write_tree(root: Path, files: dict) -> Path:
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return root
+
+
+def lint(paths, rules=None, tests=None, baseline=None):
+    return Analyzer(rules).run(Project(paths, tests=tests),
+                               baseline=baseline)
+
+
+def line_of(root: Path, rel: str, marker: str) -> int:
+    for i, text in enumerate((root / rel).read_text().splitlines(), 1):
+        if marker in text:
+            return i
+    raise AssertionError(f"marker {marker!r} not in {rel}")
+
+
+# ---------------------------------------------------------------------------
+# JZ001 — host-sync funnel
+# ---------------------------------------------------------------------------
+
+def test_jz001_flags_syncs_outside_funnel(tmp_path):
+    root = write_tree(tmp_path, {"serve/engine.py": """\
+        import jax
+        import jax.numpy as jnp
+
+        class Engine:
+            def _host_sync(self, vals):
+                return jax.device_get(vals)  # the ONE accounted sync
+
+            def peek(self, x):
+                return jax.device_get(x)          # leak: device_get
+
+        def leak(x):
+            x.block_until_ready()                 # leak: block
+            n = int(jnp.argmax(x))                # leak: coerce
+            return x.item()                       # leak: item
+        """})
+    found = lint([root], rules=["JZ001"]).unsuppressed
+    assert len(found) == 4
+    funnel_line = line_of(root, "serve/engine.py", "ONE accounted sync")
+    assert funnel_line not in {f.line for f in found}
+    msgs = " | ".join(f.message for f in found)
+    assert "device_get" in msgs and "block_until_ready" in msgs
+    assert "`.item()`" in msgs and "`int(...)`" in msgs
+
+
+def test_jz001_ignores_host_code_outside_serve(tmp_path):
+    root = write_tree(tmp_path, {"train/loop.py": """\
+        import jax
+
+        def metrics(x):
+            return jax.device_get(x)   # fine: not under serve/
+        """})
+    assert lint([root], rules=["JZ001"]).clean
+
+
+# ---------------------------------------------------------------------------
+# JZ002 — trace purity in jit scopes
+# ---------------------------------------------------------------------------
+
+def test_jz002_direct_jit_scope(tmp_path):
+    root = write_tree(tmp_path, {"jitted.py": """\
+        import time
+
+        import jax
+
+        acc = []
+
+        @jax.jit
+        def bad(x):
+            t = time.time()        # frozen at trace time
+            print(x)               # trace-time print
+            acc.append(x)          # closed-over mutation
+            return x + t
+
+        def host_side(x):
+            print(x)               # fine: not a jit scope
+            return time.time()
+        """})
+    found = lint([root], rules=["JZ002"]).unsuppressed
+    assert len(found) == 3
+    msgs = " | ".join(f.message for f in found)
+    assert "wall-clock read" in msgs and "print" in msgs
+    assert "acc.append" in msgs
+    assert all("`jitted.bad`" in f.message for f in found)
+
+
+def test_jz002_cross_module_scan_body(tmp_path):
+    """The call-graph walk: the impurity lives in another module's
+    function, reached only because it is a lax.scan body."""
+    root = write_tree(tmp_path, {
+        "helpers.py": """\
+            import numpy as np
+
+            def noisy_step(carry, x):
+                val = np.random.uniform()     # global RNG in scan body
+                return carry + val, x
+
+            def pure_step(carry, x):
+                return carry + x, x
+            """,
+        "main.py": """\
+            from jax import lax
+
+            from helpers import noisy_step, pure_step
+
+            def run(xs):
+                return lax.scan(noisy_step, 0.0, xs)
+
+            def run_pure(xs):
+                return lax.scan(pure_step, 0.0, xs)
+            """})
+    found = lint([root], rules=["JZ002"]).unsuppressed
+    assert len(found) == 1
+    f = found[0]
+    assert f.path == "helpers.py"
+    assert f.line == line_of(root, "helpers.py", "global RNG")
+    assert "numpy.random.uniform" in f.message
+    assert "scan body" in f.message
+
+
+def test_jz002_callee_of_jitted_fn(tmp_path):
+    """Reachability through an ordinary call from inside a jit root."""
+    root = write_tree(tmp_path, {"chain.py": """\
+        import random
+
+        import jax
+
+        def inner(x):
+            return x * random.random()   # impure callee
+
+        @jax.jit
+        def outer(x):
+            return inner(x) + 1
+        """})
+    found = lint([root], rules=["JZ002"]).unsuppressed
+    assert len(found) == 1
+    assert "`chain.inner`" in found[0].message
+    assert "random.random" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# JZ003 — injected clock
+# ---------------------------------------------------------------------------
+
+def test_jz003_serve_reference_launch_call(tmp_path):
+    root = write_tree(tmp_path, {
+        "serve/clocky.py": """\
+            import time
+
+            def stamp():
+                return time.perf_counter    # reference alone flags
+            """,
+        "launch/bench.py": """\
+            import time
+
+            DEFAULT_CLOCK = time.monotonic  # reference: legal in launch/
+
+            def bench():
+                return time.time()          # call: flags
+            """})
+    found = lint([root], rules=["JZ003"]).unsuppressed
+    assert {(f.path, f.line) for f in found} == {
+        ("serve/clocky.py", line_of(root, "serve/clocky.py",
+                                    "reference alone")),
+        ("launch/bench.py", line_of(root, "launch/bench.py",
+                                    "call: flags")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# JZ004 — kernel/oracle pairing
+# ---------------------------------------------------------------------------
+
+_KERNEL = """\
+    from jax.experimental import pallas as pl
+
+    def _body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def foo(x):
+        return pl.pallas_call(_body, out_shape=x)(x)
+    """
+
+
+def test_jz004_missing_ref_module(tmp_path):
+    root = write_tree(tmp_path / "proj", {"kernels/foo.py": _KERNEL})
+    found = lint([root], rules=["JZ004"]).unsuppressed
+    assert len(found) == 1
+    assert "no sibling kernels/ref.py" in found[0].message
+
+
+def test_jz004_no_pairing_oracle(tmp_path):
+    root = write_tree(tmp_path / "proj", {
+        "kernels/foo.py": _KERNEL,
+        "kernels/ref.py": "def bar_ref(x):\n    return x\n"})
+    found = lint([root], rules=["JZ004"]).unsuppressed
+    assert len(found) == 1
+    assert "no `*_ref` oracle" in found[0].message
+
+
+def test_jz004_paired_but_untested(tmp_path):
+    root = write_tree(tmp_path / "proj", {
+        "kernels/foo.py": _KERNEL,
+        "kernels/ref.py": "def foo_ref(x):\n    return x\n"})
+    tests = write_tree(tmp_path / "tests", {
+        "test_other.py": "def test_nothing():\n    assert True\n"})
+    found = lint([root], rules=["JZ004"], tests=tests).unsuppressed
+    assert len(found) == 1
+    assert "no test importing both" in found[0].message
+
+
+def test_jz004_paired_and_tested_is_clean(tmp_path):
+    root = write_tree(tmp_path / "proj", {
+        "kernels/foo.py": _KERNEL,
+        "kernels/ref.py": "def foo_ref(x):\n    return x\n"})
+    tests = write_tree(tmp_path / "tests", {"test_foo.py": """\
+        from kernels import ref
+        from kernels.foo import foo
+
+        def test_foo_matches_ref():
+            assert foo(1) == ref.foo_ref(1)
+        """})
+    assert lint([root], rules=["JZ004"], tests=tests).clean
+
+
+def test_jz004_prefix_pairing(tmp_path):
+    """`wkv6_chunked` pairs with `wkv6_ref` (stem + underscore)."""
+    root = write_tree(tmp_path / "proj", {
+        "kernels/wkv6.py": _KERNEL.replace("def foo(", "def wkv6_chunked("),
+        "kernels/ref.py": "def wkv6_ref(x):\n    return x\n"})
+    tests = write_tree(tmp_path / "tests", {"test_wkv.py": """\
+        from kernels import ref
+        from kernels.wkv6 import wkv6_chunked
+
+        def test_wkv():
+            assert wkv6_chunked(1) == ref.wkv6_ref(1)
+        """})
+    assert lint([root], rules=["JZ004"], tests=tests).clean
+
+
+# ---------------------------------------------------------------------------
+# JZ005 — registry/Protocol conformance (static)
+# ---------------------------------------------------------------------------
+
+_REGISTRY_PRELUDE = """\
+    from typing import Protocol
+
+    class Widget(Protocol):
+        name: str
+
+        def ping(self, x) -> int: ...
+        @property
+        def live(self) -> bool: ...
+
+    WIDGETS = {}
+
+    def register_widget(name):
+        def deco(cls):
+            cls.name = name
+            WIDGETS[name] = cls
+            return cls
+        return deco
+
+"""
+
+
+def test_jz005_missing_member(tmp_path):
+    root = write_tree(tmp_path, {"api.py": _REGISTRY_PRELUDE + """\
+    @register_widget("bad")
+    class BadWidget:
+        def ping(self, x):
+            return 1
+    """})
+    found = lint([root], rules=["JZ005"]).unsuppressed
+    assert len(found) == 1
+    assert "missing property `live`" in found[0].message
+    # `name` is NOT reported: register_widget assigns it (decorator credit)
+    assert "name" not in found[0].message
+
+
+def test_jz005_arity_mismatch(tmp_path):
+    root = write_tree(tmp_path, {"api.py": _REGISTRY_PRELUDE + """\
+    @register_widget("narrow")
+    class NarrowWidget:
+        def ping(self, x, y):          # extra required positional
+            return 1
+
+        @property
+        def live(self):
+            return True
+    """})
+    found = lint([root], rules=["JZ005"]).unsuppressed
+    assert len(found) == 1
+    assert "not call-compatible" in found[0].message
+
+
+def test_jz005_conforming_and_inherited_members(tmp_path):
+    root = write_tree(tmp_path, {"api.py": _REGISTRY_PRELUDE + """\
+    class PingBase:
+        def ping(self, x, extra=None):
+            return 1
+
+    @register_widget("ok")
+    class GoodWidget(PingBase):        # ping inherited through a base
+        @property
+        def live(self):
+            return True
+    """})
+    assert lint([root], rules=["JZ005"]).clean
+
+
+# ---------------------------------------------------------------------------
+# frame: suppressions, baseline, registry
+# ---------------------------------------------------------------------------
+
+def test_suppression_trailing_and_standalone(tmp_path):
+    root = write_tree(tmp_path, {"serve/s.py": """\
+        import time
+
+        A = time.time  # jz: allow[JZ003] trailing fixture reason
+
+        # jz: allow[JZ003] standalone fixture reason
+        B = time.monotonic
+
+        C = time.perf_counter  # jz: allow[JZ001] wrong rule id
+        """})
+    report = lint([root], rules=["JZ003"])
+    assert len(report.findings) == 3
+    reasons = {f.suppress_reason for f in report.suppressed}
+    assert reasons == {"trailing fixture reason",
+                       "standalone fixture reason"}
+    assert len(report.unsuppressed) == 1        # wrong-id allow is inert
+    assert report.unsuppressed[0].line == line_of(
+        root, "serve/s.py", "wrong rule id")
+
+
+def test_baseline_round_trip(tmp_path):
+    root = write_tree(tmp_path, {"serve/s.py": """\
+        import time
+        A = time.time
+        """})
+    report = lint([root], rules=["JZ003"])
+    assert not report.clean
+    bl_path = tmp_path / "baseline.json"
+    assert write_baseline(report, bl_path) == 1
+    baseline = load_baseline(bl_path)
+    grandfathered = lint([root], rules=["JZ003"], baseline=baseline)
+    assert grandfathered.clean
+    assert len(grandfathered.baselined) == 1
+    # a NEW finding on another line still fails under the old baseline
+    (root / "serve" / "s.py").write_text(
+        "import time\nA = time.time\nB = time.monotonic\n")
+    rerun = lint([root], rules=["JZ003"], baseline=baseline)
+    assert not rerun.clean and len(rerun.unsuppressed) == 1
+
+
+def test_missing_baseline_file_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.json") == set()
+
+
+def test_rule_registry_is_pluggable(tmp_path):
+    """The analyzer frame mirrors serve/api.py: checkers plug in by id."""
+    write_tree(tmp_path, {"m.py": "x = 1\n"})
+
+    @register_rule("JZ999", "test-only always-fires rule")
+    class AlwaysFires:
+        def check(self, project):
+            for sf in project.files:
+                yield Finding(rule=self.id, path=sf.rel, line=1, col=0,
+                              message="fired")
+
+    try:
+        report = lint([tmp_path], rules=["JZ999"])
+        assert [f.rule for f in report.unsuppressed] == ["JZ999"]
+    finally:
+        del RULES["JZ999"]
+
+
+def test_unknown_rule_id_raises():
+    with pytest.raises(ValueError, match="JZ777"):
+        Analyzer(["JZ777"])
+
+
+# ---------------------------------------------------------------------------
+# the live tree
+# ---------------------------------------------------------------------------
+
+def test_live_tree_self_check():
+    """The merged repo lints clean: zero unsuppressed findings over
+    src/, with exactly the two documented clock-injection allows."""
+    report = lint([SRC])
+    assert report.clean, report.render_text()
+    suppressed = {(f.rule, f.path) for f in report.suppressed}
+    assert suppressed == {("JZ003", "repro/serve/api.py"),
+                          ("JZ003", "repro/serve/parking.py")}
+
+
+def test_removing_grandfathered_allow_fails(tmp_path):
+    """Stripping the `# jz: allow[JZ003]` off the real EngineConfig.clock
+    default must turn the suppressed finding into a hard failure."""
+    src = (SRC / "repro" / "serve" / "api.py").read_text()
+    assert "jz: allow[JZ003]" in src
+    stripped = "\n".join(
+        line.split("#")[0].rstrip() if "jz: allow[JZ003]" in line else line
+        for line in src.splitlines()) + "\n"
+    write_tree(tmp_path, {"serve/api.py": stripped})
+    report = lint([tmp_path], rules=["JZ003"])
+    assert not report.clean
+    assert any("time.perf_counter" in f.message
+               for f in report.unsuppressed)
+
+
+def test_seeded_violation_smoke(tmp_path):
+    """Inject a raw device read into a copy of the REAL engine source
+    and prove the linter catches it (and only it)."""
+    engine_src = (SRC / "repro" / "serve" / "engine.py").read_text()
+    leaky = engine_src + textwrap.dedent("""\
+
+        def _leak_probe(state):
+            import jax
+            return jax.device_get(state)   # seeded unaccounted sync
+        """)
+    root = write_tree(tmp_path, {"serve/engine.py": leaky})
+    found = lint([root], rules=["JZ001"]).unsuppressed
+    assert len(found) == 1
+    assert found[0].line == line_of(root, "serve/engine.py",
+                                    "seeded unaccounted sync")
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args):
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=str(REPO))
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    dirty = write_tree(tmp_path / "dirty", {
+        "serve/s.py": "import time\nA = time.time\n"})
+    clean = write_tree(tmp_path / "clean", {"m.py": "x = 1\n"})
+
+    res = _run_cli(str(dirty), "--format", "json")
+    assert res.returncode == 1, res.stderr
+    payload = json.loads(res.stdout)
+    assert payload["counts"]["findings"] == 1
+    assert payload["findings"][0]["rule"] == "JZ003"
+
+    assert _run_cli(str(clean)).returncode == 0
+    assert _run_cli(str(tmp_path / "missing")).returncode == 2
+    assert _run_cli(str(clean), "--rules", "JZ777").returncode == 2
+
+
+def test_cli_baseline_workflow(tmp_path):
+    dirty = write_tree(tmp_path / "d", {
+        "serve/s.py": "import time\nA = time.time\n"})
+    bl = tmp_path / "bl.json"
+    res = _run_cli(str(dirty), "--baseline", str(bl), "--write-baseline")
+    assert res.returncode == 0, res.stderr
+    res = _run_cli(str(dirty), "--baseline", str(bl))
+    assert res.returncode == 0, res.stdout
+    assert "1 baselined" in res.stdout
