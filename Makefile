@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint bench-smoke bench-sched bench-prefill bench-decode \
-	bench-sample bench-load bench quickstart
+	bench-sample bench-load bench-reliability bench quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -30,6 +30,9 @@ bench-sample:
 
 bench-load:
 	$(PY) benchmarks/serving_load.py --smoke
+
+bench-reliability:
+	$(PY) benchmarks/reliability.py --smoke
 
 bench:
 	$(PY) benchmarks/run.py

@@ -1,83 +1,177 @@
 """§6.1-analogue: GBN vs SR bandwidth under loss + training-goodput twin
-+ serving-under-faults (streams survive mid-run park storms and kills).
++ serving-under-faults + crash-anywhere recovery (DESIGN.md §9).
 
 Paper claims: both near peak below 1e-4 loss; GBN falls sharply by 1e-3
 (25 Gbps in the paper's setup); SR degrades gracefully. The training twin
 shows the same cliff for checkpoint-replay (GBN) vs selective
-recomputation (SR) under worker failures. The serving section drives the
-live-traffic front end (DESIGN.md §3.8) through the same timed trace
-twice — fault-free vs with a mid-run park/unpark storm and a slot kill
-injected from `ft.ServingFaultInjector` — and asserts every client
-stream is byte-identical: parking restores exact KV, a killed request
-replays via recompute preemption and its handle dedupes the replayed
-prefix, so faults cost time, never bytes.
+recomputation (SR) under worker failures. The serving sections drive the
+live-traffic front end (DESIGN.md §3.8) through timed traces and assert
+faults cost time, never bytes:
+
+- park storm + slot kill mid-run: streams byte-identical; every
+  *scheduled* fault step must have exactly one log entry — landed or
+  explicitly empty — so the identity check can never pass vacuously.
+- crash-anywhere: a whole-engine crash+restore at EVERY step boundary
+  of the reference trace yields byte-identical streams.
+- recovery crossover: restore-from-snapshot (GBN analog) vs
+  replay-from-zero (SR analog), measured as extra steps to finish and
+  decode spans recomputed against snapshot bytes carried.
+
+``--smoke`` (CI) runs the serving sections on the reference trace only.
 """
 from repro.core.transport import (simulate_reliability,
                                   simulate_training_goodput)
 
 
-def _serving_under_faults() -> str:
+def _tiny_stack():
     import jax
     from repro.configs.registry import SMOKE_CONFIGS
-    from repro.ft import ServingFaultInjector
     from repro.models import lm
-    from repro.serve.api import EngineConfig, make_engine, make_frontend
-    from repro.serve.frontend import VirtualClock
-    from repro.serve.loadgen import TraceSpec, make_trace
 
     cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
         n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
         d_ff=128, vocab_size=256, dtype="float32")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    spec = TraceSpec(arrival="bursty", rate=0.4, burst=4.0, seed=11,
+    return cfg, params
+
+
+def _ecfg_kw():
+    return dict(slots=3, cache_len=96, kv_layout="paged", n_pages=64,
+                page_size=8, decode_span=2, eos_token=-1,
+                scheduler="priority", admit_capacity=64)
+
+
+def _spec():
+    from repro.serve.loadgen import TraceSpec
+    return TraceSpec(arrival="bursty", rate=0.4, burst=4.0, seed=11,
                      prompt_lens=((1.0, 8, 24),),
                      output_lens=((1.0, 6, 14),))
 
-    def one_run(inject: bool):
-        eng = make_engine(cfg, params, EngineConfig(
-            slots=3, cache_len=96, kv_layout="paged", n_pages=64,
-            page_size=8, decode_span=2, eos_token=-1,
-            scheduler="priority", admit_capacity=64,
-            clock=VirtualClock()))
-        fe = make_frontend("local", eng, step_dt=1.0)
-        inj = None
-        if inject:
-            inj = ServingFaultInjector(
-                eng, park_storm_at=(6,), kill_at=(14,)).attach(fe)
-        hs = fe.run(make_trace(spec, 10, cfg.vocab_size))
-        assert all(h.ok for h in hs), "fault run lost a request"
-        return ({h.req.req_id: tuple(h.streamed) for h in hs}, eng, inj)
 
-    clean, _, _ = one_run(inject=False)
-    faulted, eng, inj = one_run(inject=True)
-    assert any(e["fault"] == "park_storm" for e in inj.log), \
-        "park storm never landed"
-    assert any(e["fault"] == "kill" for e in inj.log), "kill never landed"
-    assert faulted == clean, \
+def _serving_under_faults() -> str:
+    from repro.ft import drive
+    from repro.serve.loadgen import make_trace
+
+    cfg, params = _tiny_stack()
+    spec = _spec()
+    kw = _ecfg_kw()
+
+    def trace():
+        return make_trace(spec, 10, cfg.vocab_size)
+
+    clean = drive(cfg, params, kw, trace())
+    park_at, kill_at = (6,), (14,)
+    faulted = drive(cfg, params, kw, trace(),
+                    park_storm_at=park_at, kill_at=kill_at)
+    # every *scheduled* fault produced exactly one log entry — a landed
+    # fault or an explicit `"slots": []` — never a silent no-op
+    for kind, steps in (("park_storm", park_at), ("kill", kill_at)):
+        for s in steps:
+            hits = [e for e in faulted.fault_log
+                    if e["step"] == s and e["fault"] == kind]
+            assert len(hits) == 1, \
+                f"scheduled {kind}@{s} left {len(hits)} log entries"
+    landed = [e for e in faulted.fault_log if e["slots"]]
+    assert landed, "no scheduled fault found a victim — trace too small"
+    assert faulted.streams == clean.streams, \
         "a mid-run fault changed a client stream byte"
-    parked, killed = eng.stats["parked"], eng.stats["preempt_restarts"]
+    parked = faulted.engine_stats["parked"]
+    killed = faulted.engine_stats["preempt_restarts"]
     return ("serving,faults=park_storm+kill,"
             f"parked={parked},killed={killed},"
-            f"streams_identical={len(clean)}/{len(clean)}")
+            f"streams_identical={len(clean.streams)}/{len(clean.streams)}")
 
 
-def run():
-    rows = ["kind,policy,loss_or_failure_rate,goodput"]
-    for lr in (1e-5, 1e-4, 1e-3, 1e-2, 5e-2):
-        for pol in ("gbn", "sr"):
-            r = simulate_reliability(pol, lr)
-            rows.append(f"packet,{pol},{lr},{r['goodput_Gbps']:.2f}Gbps")
-    for fr in (1e-4, 1e-3, 1e-2, 5e-2):
-        for pol in ("gbn", "sr"):
-            r = simulate_training_goodput(pol, fr, n_steps=3000,
-                                          checkpoint_every=100)
-            rows.append(f"train,{pol},{fr},{r['goodput']:.4f}")
+def _crash_anywhere() -> str:
+    from repro.ft import crash_anywhere_sweep
+    from repro.serve.loadgen import make_trace
+
+    cfg, params = _tiny_stack()
+    spec = _spec()
+    clean, reports = crash_anywhere_sweep(
+        cfg, params, _ecfg_kw(),
+        lambda: make_trace(spec, 8, cfg.vocab_size))
+    snap_bytes = max(r.snapshot_bytes for r in reports)
+    return (f"serving_crash,boundaries={clean.steps},"
+            f"streams_identical={len(clean.streams)}/{len(clean.streams)},"
+            f"snapshot_bytes={snap_bytes}")
+
+
+def _recovery_crossover() -> list:
+    """GBN-vs-SR for engine recovery: snapshot restore pays bytes per
+    boundary and recomputes little; replay-from-zero carries nothing and
+    recomputes every in-flight token. Recovery cost depends on WHERE the
+    crash lands (an idle boundary is free; mid-decode is the worst case),
+    so each policy is swept over every boundary of the reference trace
+    and reported as mean/max extra steps to finish plus total decode
+    spans and prefills recomputed."""
+    from repro.ft import drive
+    from repro.serve.loadgen import make_trace
+
+    cfg, params = _tiny_stack()
+    spec = _spec()
+    kw = _ecfg_kw()
+
+    def trace():
+        return make_trace(spec, 8, cfg.vocab_size)
+
+    clean = drive(cfg, params, kw, trace())
+
+    def recomputed(r, key):
+        """Work performed across ALL engine incarnations minus the
+        clean run: each crash entry records the dying engine's counters
+        (lost with the object) and the successor's restored baseline."""
+        total = r.engine_stats[key]
+        for e in r.crash_log:
+            total += e["work_at_crash"][key] - e["work_restored"][key]
+        return total - clean.engine_stats[key]
+
+    rows = []
+    for policy, snap_every in (("snapshot", 1), ("snapshot", 4),
+                               ("replay", 0)):
+        extra, respans, represt = [], 0, 0
+        carried = 0
+        for at in range(1, clean.steps):
+            r = drive(cfg, params, kw, trace(), crash_at=(at,),
+                      snapshot_every=snap_every, policy=(policy,))
+            assert r.streams == clean.streams, \
+                f"recovery policy {policy} changed a stream byte at {at}"
+            extra.append(r.steps - clean.steps)
+            respans += recomputed(r, "decode_spans")
+            represt += recomputed(r, "prefills")
+            carried = max(carried, r.snapshot_bytes)
+        mean = sum(extra) / max(1, len(extra))
+        rows.append(f"crash_recovery,{policy},snap_every={snap_every},"
+                    f"boundaries={len(extra)},"
+                    f"extra_steps_mean={mean:.2f},"
+                    f"extra_steps_max={max(extra)},respans={respans},"
+                    f"reprefills={represt},snapshot_bytes={carried}")
+    return rows
+
+
+def run(smoke: bool = False) -> str:
+    rows = []
+    if not smoke:
+        rows.append("kind,policy,loss_or_failure_rate,goodput")
+        for lr in (1e-5, 1e-4, 1e-3, 1e-2, 5e-2):
+            for pol in ("gbn", "sr"):
+                r = simulate_reliability(pol, lr)
+                rows.append(
+                    f"packet,{pol},{lr},{r['goodput_Gbps']:.2f}Gbps")
+        for fr in (1e-4, 1e-3, 1e-2, 5e-2):
+            for pol in ("gbn", "sr"):
+                r = simulate_training_goodput(pol, fr, n_steps=3000,
+                                              checkpoint_every=100)
+                rows.append(f"train,{pol},{fr},{r['goodput']:.4f}")
     rows.append(_serving_under_faults())
+    rows.append(_crash_anywhere())
+    rows.extend(_recovery_crossover())
     return "\n".join(rows)
 
 
 def main():
-    print(run())
+    import sys
+    print(run(smoke="--smoke" in sys.argv))
 
 
 if __name__ == "__main__":

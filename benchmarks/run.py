@@ -30,6 +30,8 @@ def main() -> None:
             ("sec3_sampling_overhead",
              lambda: sampling_overhead.run(smoke=True)),
             ("sec4_serving_load", lambda: serving_load.run(smoke=True)),
+            ("sec6.1_reliability_crash_recovery",
+             lambda: reliability.run(smoke=True)),
             ("fig14_e2e_prototype", e2e.run),
         ]
     else:

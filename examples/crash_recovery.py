@@ -1,0 +1,81 @@
+"""Crash-anywhere serving demo (DESIGN.md §9).
+
+Three acts on one reference trace:
+
+1. crash+restore the whole engine at EVERY step boundary of the clean
+   run — every client stream stays byte-identical;
+2. the recovery-policy split: restore-from-snapshot (GBN analog) vs
+   replay-from-zero (SR analog), same bytes either way, different cost;
+3. persistence: snapshot to disk mid-run through the Checkpointer
+   manifest, "restart the process", resume, and finish identically.
+
+  PYTHONPATH=src python examples/crash_recovery.py
+"""
+import tempfile
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.ft import crash_anywhere_sweep, drive
+from repro.ft.chaos import build_stack
+from repro.models import lm
+from repro.serve.loadgen import TraceSpec, make_trace
+
+
+def main():
+    cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=3, cache_len=96, kv_layout="paged", n_pages=64,
+              page_size=8, decode_span=2, eos_token=-1,
+              scheduler="priority", admit_capacity=64)
+    spec = TraceSpec(arrival="bursty", rate=0.4, burst=4.0, seed=11,
+                     prompt_lens=((1.0, 8, 24),),
+                     output_lens=((1.0, 6, 14),))
+
+    def trace():
+        return make_trace(spec, 6, cfg.vocab_size)
+
+    # -- act 1: crash at every boundary --------------------------------
+    clean, reports = crash_anywhere_sweep(cfg, params, kw, trace)
+    print(f"clean run: {clean.steps} steps, "
+          f"{len(clean.streams)} streams")
+    print(f"crash-anywhere: {len(reports)} boundaries swept, "
+          f"all streams byte-identical "
+          f"(snapshot ~{reports[0].snapshot_bytes} bytes)")
+
+    # -- act 2: recovery policies --------------------------------------
+    at = max(2, clean.steps // 2)
+    for policy, every, tag in (("snapshot", 1, "GBN analog"),
+                               ("replay", 1, "SR analog")):
+        r = drive(cfg, params, kw, trace(), crash_at=(at,),
+                  snapshot_every=every, policy=(policy,))
+        e = r.crash_log[0]
+        assert r.streams == clean.streams
+        print(f"policy={policy:8s} ({tag}): crash@{at} "
+              f"restored_from={e['restored_from']} "
+              f"replayed={e['replayed']} "
+              f"extra_steps={r.steps - clean.steps} -> streams identical")
+
+    # -- act 3: persistence through the Checkpointer -------------------
+    with tempfile.TemporaryDirectory() as d:
+        fe, rebuild = build_stack(cfg, params, kw)
+        # stop as soon as every arrival is in (no drain): mid-run state
+        handles = fe.run(trace(), max_steps=500, drain=False)
+        fe.engine.save_snapshot(Checkpointer(d), step=fe.steps)
+        eng2 = rebuild()                      # "the process restarts"
+        eng2.load_snapshot(Checkpointer(d))
+        fe.reattach(eng2)
+        fe.run(max_steps=500)
+        got = {h.req.req_id: tuple(h.streamed) for h in handles}
+        assert got == clean.streams, "disk round-trip changed a stream"
+        s = eng2.stats
+        assert s["host_syncs"] == s["prefills"] + s["decode_spans"]
+        print(f"disk round-trip at step {fe.steps}: resumed engine "
+              f"finished {len(got)} streams byte-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -249,7 +249,7 @@ def register_rule(rule_id: str, title: str) -> Callable[[Type], Type]:
 def make_rules(only: Optional[Sequence[str]] = None) -> List[Rule]:
     # import registers the built-ins, mirroring make_scheduler & co.
     from repro.analysis import (rules_oracle, rules_registry,  # noqa: F401
-                                rules_sync, rules_trace)
+                                rules_snapshot, rules_sync, rules_trace)
     ids = sorted(RULES) if only is None else list(only)
     unknown = [i for i in ids if i not in RULES]
     if unknown:

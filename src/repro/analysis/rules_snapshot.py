@@ -1,0 +1,135 @@
+"""JZ006 — snapshottable classes declare a complete `_SNAPSHOT_FIELDS`
+manifest.
+
+`ServingEngine.snapshot()` (DESIGN.md §9) promises to capture the whole
+engine: every mutable attribute is either serialized ("captured"),
+derivable from the constructor args ("config"), or recreated by
+`__init__` ("rebuilt"). That promise silently rots the day someone adds
+`self.new_thing = ...` to `__init__` without deciding which bucket it
+falls in — the crash-anywhere sweep still passes until a trace actually
+exercises the forgotten field.
+
+This rule makes the decision mandatory at lint time: any class that
+defines a ``snapshot`` method must carry a class-level
+``_SNAPSHOT_FIELDS`` manifest (a dict literal keyed by attribute name,
+or a tuple/list/set of names), and every ``self.X = ...`` assigned in
+that class's ``__init__`` must appear in it. A missing manifest fires at
+the class line; an unlisted attribute fires at its assignment line, so
+the fix is one keystroke away from the finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Project, register_rule
+
+MANIFEST = "_SNAPSHOT_FIELDS"
+
+
+def _manifest_names(node: ast.AST) -> Optional[Set[str]]:
+    """Attribute names declared by a `_SNAPSHOT_FIELDS = ...` literal;
+    None when the value is not statically readable (flagged upstream)."""
+    if isinstance(node, ast.Dict):
+        keys = set()
+        for k in node.keys:
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                return None
+            keys.add(k.value)
+        return keys
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        names = set()
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, str)):
+                return None
+            names.add(el.value)
+        return names
+    return None
+
+
+def _find_manifest(cls: ast.ClassDef) -> Optional[ast.Assign]:
+    for node in cls.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == MANIFEST:
+                    return node
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name) and node.target.id == MANIFEST \
+                and node.value is not None:
+            return ast.Assign(targets=[node.target], value=node.value,
+                              lineno=node.lineno,
+                              col_offset=node.col_offset)
+    return None
+
+
+def _init_self_assigns(cls: ast.ClassDef) -> List[Tuple[str, ast.AST]]:
+    """(attr, node) for every `self.X = ...` in `__init__`, in source
+    order, first assignment per attribute."""
+    init = next((n for n in cls.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and n.name == "__init__"), None)
+    if init is None:
+        return []
+    seen: Dict[str, ast.AST] = {}
+    for sub in ast.walk(init):
+        if isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            tgts = sub.targets if isinstance(sub, ast.Assign) \
+                else [sub.target]
+            for t in tgts:
+                els = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                    else [t]
+                for el in els:
+                    if isinstance(el, ast.Attribute) and isinstance(
+                            el.value, ast.Name) and el.value.id == "self" \
+                            and el.attr not in seen:
+                        seen[el.attr] = sub
+    return sorted(seen.items(), key=lambda kv: kv[1].lineno)
+
+
+@register_rule(
+    "JZ006",
+    "classes with a snapshot() method declare every __init__ attribute "
+    "in _SNAPSHOT_FIELDS")
+class SnapshotManifestRule:
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for sf in project.files:
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.ClassDef):
+                    continue
+                has_snapshot = any(
+                    isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and n.name == "snapshot" for n in node.body)
+                if not has_snapshot:
+                    continue
+                yield from self._check_class(node, sf)
+
+    def _check_class(self, cls: ast.ClassDef, sf) -> Iterable[Finding]:
+        manifest = _find_manifest(cls)
+        if manifest is None:
+            yield Finding(
+                rule=self.id, path=sf.rel, line=cls.lineno,
+                col=cls.col_offset,
+                message=f"class `{cls.name}` defines snapshot() but no "
+                        f"class-level `{MANIFEST}` manifest")
+            return
+        names = _manifest_names(manifest.value)
+        if names is None:
+            yield Finding(
+                rule=self.id, path=sf.rel, line=manifest.lineno,
+                col=manifest.col_offset,
+                message=f"`{cls.name}.{MANIFEST}` must be a literal dict "
+                        f"keyed by attribute name (or a tuple/list/set "
+                        f"of names) so the manifest is statically "
+                        f"checkable")
+            return
+        for attr, node in _init_self_assigns(cls):
+            if attr not in names:
+                yield Finding(
+                    rule=self.id, path=sf.rel, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"`self.{attr}` is assigned in "
+                            f"`{cls.name}.__init__` but missing from "
+                            f"`{MANIFEST}` — decide: config, captured, "
+                            f"or rebuilt")

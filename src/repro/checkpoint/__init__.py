@@ -1,2 +1,3 @@
 from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
-                                           reshard_tree)  # noqa
+                                           pack_tree, reshard_tree,
+                                           unpack_tree)  # noqa

@@ -11,6 +11,7 @@
 """
 from __future__ import annotations
 
+import atexit
 import json
 import threading
 import time
@@ -34,51 +35,83 @@ class Checkpointer:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()
         self.last_saved_step: Optional[int] = None
+        # flush at interpreter exit: the writer thread is a daemon, so
+        # without this the last async save could die mid-write and leave
+        # the newest snapshot truncated (atexit runs before daemon
+        # threads are killed)
+        atexit.register(self.wait)
 
     # -- save -------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
              blocking: bool = False):
-        """Snapshot to host, then write on a background thread."""
-        self.wait()  # only one in-flight save (double buffer)
-        flat, _ = _flatten_with_paths(tree)
+        """Snapshot to host, then write on a background thread.
 
-        def to_host(leaf):
-            a = np.asarray(leaf)
-            if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
-                # npz cannot round-trip ml_dtypes; upcast losslessly
-                a = np.asarray(leaf, dtype=np.float32)
-            return a
+        Serialized end to end: the in-flight writer (if any) is joined
+        before the next host snapshot starts, and concurrent `save`
+        callers queue on a lock — two writes can never interleave on
+        disk, and a failed background write surfaces on the next
+        save/wait instead of vanishing with the thread.
+        """
+        with self._lock:
+            self._join_writer()  # only one in-flight save (double buffer)
+            flat, _ = _flatten_with_paths(tree)
 
-        host = [(name, to_host(leaf)) for name, leaf in flat]
-        meta = {
-            "step": step,
-            "extra": extra or {},
-            "leaves": [{"name": n, "shape": list(a.shape),
-                        "dtype": str(a.dtype)} for n, a in host],
-        }
+            def to_host(leaf):
+                a = np.asarray(leaf)
+                if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+                    # npz cannot round-trip ml_dtypes; upcast losslessly
+                    a = np.asarray(leaf, dtype=np.float32)
+                return a
 
-        def _write():
-            d = self.dir / f"step_{step:08d}"
-            tmp = self.dir / f".tmp_step_{step:08d}"
-            tmp.mkdir(parents=True, exist_ok=True)
-            np.savez(tmp / "shards.npz",
-                     **{f"leaf_{i}": a for i, (_, a) in enumerate(host)})
-            (tmp / "manifest.json").write_text(json.dumps(meta))
-            tmp.rename(d)
-            self.last_saved_step = step
-            self._gc()
+            host = [(name, to_host(leaf)) for name, leaf in flat]
+            meta = {
+                "step": step,
+                "extra": extra or {},
+                "leaves": [{"name": n, "shape": list(a.shape),
+                            "dtype": str(a.dtype)} for n, a in host],
+            }
 
-        if blocking:
-            _write()
-        else:
-            self._thread = threading.Thread(target=_write, daemon=True)
-            self._thread.start()
+            def _write():
+                d = self.dir / f"step_{step:08d}"
+                tmp = self.dir / f".tmp_step_{step:08d}"
+                tmp.mkdir(parents=True, exist_ok=True)
+                np.savez(tmp / "shards.npz",
+                         **{f"leaf_{i}": a for i, (_, a) in enumerate(host)})
+                (tmp / "manifest.json").write_text(json.dumps(meta))
+                if d.exists():  # re-save of the same step replaces it
+                    for f in d.iterdir():
+                        f.unlink()
+                    d.rmdir()
+                tmp.rename(d)
+                self.last_saved_step = step
+                self._gc()
 
-    def wait(self):
+            def _guarded():
+                try:
+                    _write()
+                except BaseException as e:  # surfaces at next save/wait
+                    self._error = e
+
+            if blocking:
+                _write()
+            else:
+                self._thread = threading.Thread(target=_guarded, daemon=True)
+                self._thread.start()
+
+    def _join_writer(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def wait(self):
+        with self._lock:
+            self._join_writer()
 
     def _gc(self):
         steps = sorted(self.dir.glob("step_*"))
@@ -103,6 +136,74 @@ class Checkpointer:
         out = [jnp.asarray(a, dtype=t.dtype) if hasattr(t, "dtype")
                else jnp.asarray(a) for a, t in zip(leaves, flat_t)]
         return jax.tree_util.tree_unflatten(treedef, out), meta
+
+    def load(self, step: Optional[int] = None) -> tuple[Dict, list]:
+        """Template-free read: (manifest dict, host leaves in shard
+        order). For payloads whose structure is recorded in the manifest
+        `extra` itself (`pack_tree`) rather than known to the caller —
+        the engine-snapshot path (DESIGN.md §9)."""
+        self.wait()  # never read past an in-flight write of this step
+        step = step if step is not None else latest_step(self.dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        meta = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "shards.npz")
+        leaves = [data[f"leaf_{i}"] for i in range(len(meta["leaves"]))]
+        return meta, leaves
+
+
+# -- JSON-skeleton <-> array-leaf codec (engine snapshots, DESIGN.md §9) ---
+
+def pack_tree(obj: Any) -> tuple[list, Any]:
+    """Split a nested snapshot (dicts with str keys, lists/tuples,
+    scalars, None, arrays) into (array leaves, JSON-able skeleton):
+    every array is replaced by a `{"__leaf__": i, "dtype": ...}`
+    placeholder so the skeleton rides in a manifest's `extra` and the
+    arrays in the npz shard. `unpack_tree` inverts it (tuples come back
+    as lists; dtype is restored, so the npz bf16->f32 upcast round-trips
+    losslessly)."""
+    leaves: list = []
+
+    def enc(x):
+        if isinstance(x, (np.ndarray, jax.Array)):
+            a = np.asarray(x)
+            leaves.append(a)
+            return {"__leaf__": len(leaves) - 1, "dtype": str(a.dtype)}
+        if isinstance(x, np.generic):
+            return x.item()
+        if isinstance(x, dict):
+            out = {}
+            for k, v in x.items():
+                if not isinstance(k, str):
+                    raise TypeError(
+                        f"pack_tree requires str dict keys, got {k!r}")
+                out[k] = enc(v)
+            return out
+        if isinstance(x, (list, tuple)):
+            return [enc(v) for v in x]
+        if x is None or isinstance(x, (bool, int, float, str)):
+            return x
+        raise TypeError(f"pack_tree cannot encode {type(x).__name__}")
+
+    return leaves, enc(obj)
+
+
+def unpack_tree(meta: Any, leaves: list) -> Any:
+    def dec(x):
+        if isinstance(x, dict):
+            if "__leaf__" in x:
+                a = np.asarray(leaves[x["__leaf__"]])
+                want = x.get("dtype")
+                if want and str(a.dtype) != want:
+                    a = a.astype(jnp.dtype(want))
+                return a
+            return {k: dec(v) for k, v in x.items()}
+        if isinstance(x, list):
+            return [dec(v) for v in x]
+        return x
+
+    return dec(meta)
 
 
 def latest_step(directory) -> Optional[int]:

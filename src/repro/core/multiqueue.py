@@ -86,6 +86,16 @@ class HostMultiQueue:
                 return out
             out.append(item)
 
+    def items(self, q: int) -> List[Any]:
+        """Non-destructive FIFO-order view of queue q's payloads (the
+        snapshot read path — walking the links leaves the pool intact)."""
+        out: List[Any] = []
+        slot = int(self._head[q])
+        while slot >= 0:
+            out.append(self._payload[slot])
+            slot = int(self._next[slot])
+        return out
+
     # -- QoS pop helpers (paper Fig 9: class queues share one pool) -----
     @property
     def total_len(self) -> int:

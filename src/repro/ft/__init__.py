@@ -1,2 +1,6 @@
 from repro.ft.faults import ServingFaultInjector  # noqa
 from repro.ft.manager import FaultTolerantTrainer, FTConfig  # noqa
+from repro.ft.crash import (CrashInjector, POLICY_REPLAY,  # noqa
+                            POLICY_SNAPSHOT, policy_of)
+from repro.ft.chaos import (ChaosReport, crash_anywhere_sweep,  # noqa
+                            drive, random_schedule)

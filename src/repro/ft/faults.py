@@ -46,12 +46,15 @@ class ServingFaultInjector:
                 and not eng.prefilling[i] and eng.slot_req[i] is not None]
 
     def __call__(self, step: int) -> None:
+        # every scheduled fault leaves a log entry, even with no eligible
+        # victims ("slots": []): a reliability assert can distinguish
+        # "the fault landed" from "the schedule silently missed", so
+        # stream-identity checks can never pass vacuously
         if step in self.park_storm_at:
             parked = [i for i in self._victims()
                       if self.engine._park_slot(i)]
-            if parked:
-                self.log.append({"step": step, "fault": "park_storm",
-                                 "slots": parked})
+            self.log.append({"step": step, "fault": "park_storm",
+                             "slots": parked})
         if step in self.kill_at:
             victims = self._victims()
             if victims:
@@ -60,3 +63,6 @@ class ServingFaultInjector:
                 self.engine._preempt_restart(slot)
                 self.log.append({"step": step, "fault": "kill",
                                  "slots": [slot], "req_id": rid})
+            else:
+                self.log.append({"step": step, "fault": "kill",
+                                 "slots": []})

@@ -138,6 +138,47 @@ class ParkMeta(NamedTuple):
     n_pages: int                  # 0 for layouts without page indirection
 
 
+def request_to_state(req: Request) -> dict:
+    """JSON-able snapshot of a Request (DESIGN.md §9).
+
+    Streaming hooks are intentionally dropped: they are process-local
+    callables that `Frontend.reattach` re-wires after a restore. The PR 5
+    determinism anchors — `sampling.seed` and `len(tokens_out)` (the
+    emitted index the PRNG key derivation folds in) — are carried
+    verbatim, so a restored request re-derives its key stream exactly.
+    """
+    s = req.sampling
+    return {
+        "req_id": int(req.req_id),
+        "prompt": [int(t) for t in np.asarray(req.prompt).reshape(-1)],
+        "max_new_tokens": int(req.max_new_tokens),
+        "qos": int(req.qos),
+        "arrived_at": float(req.arrived_at),
+        "tokens_out": [int(t) for t in req.tokens_out],
+        "finished_at": (None if req.finished_at is None
+                        else float(req.finished_at)),
+        "sampling": [float(s.temperature), int(s.top_k), float(s.top_p),
+                     int(s.seed), bool(s.logprobs)],
+        "logprobs_out": [float(x) for x in req.logprobs_out],
+    }
+
+
+def request_from_state(d: dict) -> Request:
+    temp, top_k, top_p, seed, logprobs = d["sampling"]
+    return Request(
+        req_id=int(d["req_id"]),
+        prompt=np.asarray(d["prompt"], dtype=np.int32),
+        max_new_tokens=int(d["max_new_tokens"]),
+        qos=int(d["qos"]),
+        arrived_at=float(d["arrived_at"]),
+        tokens_out=[int(t) for t in d["tokens_out"]],
+        finished_at=(None if d["finished_at"] is None
+                     else float(d["finished_at"])),
+        sampling=SamplingParams(float(temp), int(top_k), float(top_p),
+                                int(seed), bool(logprobs)),
+        logprobs_out=[float(x) for x in d["logprobs_out"]])
+
+
 # --------------------------------------------------------------------------
 # protocols
 # --------------------------------------------------------------------------
@@ -157,6 +198,12 @@ class Scheduler(Protocol):
     def submit(self, req: Request) -> bool: ...
     def next(self) -> Optional[Request]: ...
     def requeue(self, req: Request) -> bool: ...
+    # crash recovery (DESIGN.md §9): `export` returns the queued work
+    # non-destructively as (per-class request lists, JSON-able aux state
+    # such as a round-robin cursor); `import_` loads that into a fresh
+    # scheduler, preserving pop order exactly.
+    def export(self) -> Tuple[List[List[Request]], dict]: ...
+    def import_(self, queues: List[List[Request]], aux: dict) -> None: ...
     @property
     def pending(self) -> int: ...
     @property
@@ -210,6 +257,16 @@ class KVBackend(Protocol):
     def mark_dirty(self) -> None: ...
     def sync(self, state: dict,
              slot_req_ids: List[Optional[int]]) -> dict: ...
+    # crash recovery (DESIGN.md §9): `export_state` captures the full
+    # resource tier — pool bookkeeping plus the device KV contents —
+    # as host arrays and JSON-able scalars; `import_state` rebuilds a
+    # fresh decode state from that snapshot. `snapshot_payload` /
+    # `restore_payload` are the layout's codec for opaque block payloads
+    # (prefix-cache entries: page ids for paged, host KV trees for dense).
+    def export_state(self, state: dict) -> dict: ...
+    def import_state(self, snap: dict) -> dict: ...
+    def snapshot_payload(self, payload: Any) -> Any: ...
+    def restore_payload(self, data: Any) -> Any: ...
 
 
 @runtime_checkable
@@ -255,6 +312,11 @@ class Frontend(Protocol):
     def step(self) -> None: ...
     def run(self, arrivals=None, max_steps: int = 100_000,
             drain: bool = True) -> List[Any]: ...
+    # crash recovery (DESIGN.md §9): rebind live streaming handles to a
+    # restored engine — re-wire callbacks for requests the snapshot
+    # carried, resubmit the ones it lost (handles dedupe by emitted
+    # index, so client streams stay byte-identical either way).
+    def reattach(self, engine) -> None: ...
     @property
     def live(self) -> bool: ...
 
@@ -274,6 +336,10 @@ class ParkingTransport(Protocol):
     def ready(self, now: Optional[float] = None) -> List[int]: ...
     def peek(self, req_id: int) -> Tuple[Any, ParkMeta]: ...
     def complete(self, req_id: int) -> None: ...
+    # crash recovery (DESIGN.md §9): parked payloads are engine state too
+    # — a crash between park and unpark must not lose the host-tier copy.
+    def export_state(self) -> dict: ...
+    def import_state(self, snap: dict) -> None: ...
     @property
     def in_flight(self) -> int: ...
 

@@ -287,6 +287,43 @@ class LocalFrontend:
         h._finish(OUTCOME_COMPLETED)
         self.stats["completed"] += 1
 
+    # -- crash recovery (DESIGN.md §9) ---------------------------------
+    def reattach(self, engine) -> None:
+        """Rebind live streaming handles to a restored engine.
+
+        A snapshot serializes Requests without their process-local
+        callbacks, and a crash may strike AFTER a handle's request was
+        fed but BEFORE any snapshot recorded it. Both cases converge
+        here: handles whose request the restored engine still owns are
+        re-wired onto the restored object; the rest replay from zero
+        through the admission path. Either way the client stream stays
+        byte-identical — `_feed` dedupes by emitted index and the PR 5
+        key derivation replays from `len(tokens_out)`."""
+        self.engine = engine
+        self.clock = engine.clock
+        live = engine.live_requests()
+        lost: List[RequestHandle] = []
+        for rid, h in list(self._handles.items()):
+            req = live.get(rid)
+            if req is not None:
+                h.req = req
+                req.on_tokens = h._feed
+                req.on_done = self._on_done
+            else:
+                del self._handles[rid]
+                h.req.on_tokens = None
+                h.req.on_done = None
+                h.req.tokens_out.clear()
+                h.req.logprobs_out.clear()
+                lost.append(h)
+        # back to the FRONT of each class queue in admission order: work
+        # the engine had already accepted outranks waiters behind it
+        for h in reversed(lost):
+            self._wait[self._class_of(h.req)].appendleft(h)
+        for hook in self.step_hooks:
+            if hasattr(hook, "engine"):
+                hook.engine = engine
+
     # -- drive loop ----------------------------------------------------
     def step(self) -> None:
         """One frontend pump + engine step: expire SLO-dead waiters,

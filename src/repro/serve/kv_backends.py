@@ -59,6 +59,37 @@ class _PooledKV:
     def cache_release(self, payload) -> None:
         pass
 
+    # -- crash recovery (DESIGN.md §9) ----------------------------------
+    # Pool bookkeeping travels as JSON-able pairs (not int-keyed dicts:
+    # a JSON round-trip through the Checkpointer manifest would turn
+    # int keys into strings).
+    def _export_pool(self) -> dict:
+        p = self.pool
+        return {
+            "free": [int(x) for x in p.free],
+            "tables": [[int(r), [int(x) for x in pages]]
+                       for r, pages in p.tables.items()],
+            "refcnt": [[int(g), int(c)] for g, c in p.refcnt.items()],
+            "peak": int(p.peak),
+        }
+
+    def _import_pool(self, snap: dict) -> None:
+        p = self.pool
+        p.free = [int(x) for x in snap["free"]]
+        p.tables = {int(r): [int(x) for x in pages]
+                    for r, pages in snap["tables"]}
+        p.refcnt = {int(g): int(c) for g, c in snap["refcnt"]}
+        p.peak = int(snap["peak"])
+
+    # Default payload codec: payloads are device KV trees (the dense
+    # layout) — copy to host arrays and back. Layouts with pool
+    # indirection override with their handle type.
+    def snapshot_payload(self, payload):
+        return jax.tree.map(np.asarray, payload)
+
+    def restore_payload(self, data):
+        return jax.tree.map(jnp.asarray, data)
+
 
 @register_kv_backend("dense")
 class DenseKV(_PooledKV):
@@ -144,6 +175,22 @@ class DenseKV(_PooledKV):
 
     def sync(self, state: dict,
              slot_req_ids: List[Optional[int]]) -> dict:
+        return state
+
+    def export_state(self, state: dict) -> dict:
+        return {
+            "pool": self._export_pool(),
+            "lengths": np.asarray(state["lengths"]),
+            "positions": np.asarray(state["positions"]),
+            "caches": jax.tree.map(np.asarray, state["caches"]),
+        }
+
+    def import_state(self, snap: dict) -> dict:
+        self._import_pool(snap["pool"])
+        state = self.init_state()
+        state["lengths"] = jnp.asarray(np.asarray(snap["lengths"]))
+        state["positions"] = jnp.asarray(np.asarray(snap["positions"]))
+        state["caches"] = jax.tree.map(jnp.asarray, snap["caches"])
         return state
 
 
@@ -271,6 +318,47 @@ class PagedKV(_PooledKV):
             state["page_table"] = jnp.asarray(
                 self.pool.table_matrix(slot_req_ids, width))
             self._dirty = False
+        return state
+
+    # -- crash recovery (DESIGN.md §9) ----------------------------------
+    # Prefix-cache payloads are pool page ids: a plain int round-trips.
+    def snapshot_payload(self, payload):
+        return int(payload)
+
+    def restore_payload(self, data):
+        return int(data)
+
+    def export_state(self, state: dict) -> dict:
+        """Capture only the referenced pages (tables + cache-held), in
+        sorted-id order — free pages hold stale bytes no table can reach,
+        so restoring them would be wasted snapshot bytes."""
+        used = sorted(int(g) for g in self.pool.refcnt)
+        pages = (jax.tree.map(
+            np.asarray, tf.gather_pages(state["caches"], used))
+            if used else None)
+        return {
+            "pool": self._export_pool(),
+            "lengths": np.asarray(state["lengths"]),
+            "positions": np.asarray(state["positions"]),
+            "page_ids": used,
+            "pages": pages,
+        }
+
+    def import_state(self, snap: dict) -> dict:
+        """Rebuild the pool contents at the SAME page ids the snapshot
+        recorded — tables, refcounts, and the free stack restore
+        verbatim, so post-restore alloc order (and therefore the MTT)
+        matches the crashed process exactly."""
+        self._import_pool(snap["pool"])
+        state = self.init_state()
+        state["lengths"] = jnp.asarray(np.asarray(snap["lengths"]))
+        state["positions"] = jnp.asarray(np.asarray(snap["positions"]))
+        page_ids = [int(g) for g in snap["page_ids"]]
+        if page_ids:
+            state["caches"] = tf.scatter_pages(
+                state["caches"],
+                jax.tree.map(jnp.asarray, snap["pages"]), page_ids)
+        self._dirty = True
         return state
 
 

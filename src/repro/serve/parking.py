@@ -13,6 +13,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.resource import BusModel
 from repro.serve.api import ParkMeta
@@ -52,6 +53,28 @@ class HostParkingTransport:
     def complete(self, req_id: int) -> None:
         del self._ready_at[req_id]
         del self._tier[req_id]
+
+    # -- crash recovery (DESIGN.md §9) ----------------------------------
+    def export_state(self) -> dict:
+        """Parked payloads + their bus-readiness deadlines, as host
+        arrays and JSON-able pairs. A crash between park and unpark must
+        not lose the host-tier copy — it is the only copy."""
+        return {
+            "tier": [[int(rid), jax.tree.map(np.asarray, caches),
+                      [int(meta.length), int(meta.position),
+                       int(meta.slot), int(meta.n_pages)]]
+                     for rid, (caches, meta) in self._tier.items()],
+            "ready_at": [[int(rid), float(t)]
+                         for rid, t in self._ready_at.items()],
+            "bytes_moved": float(self.bytes_moved),
+        }
+
+    def import_state(self, snap: dict) -> None:
+        self._tier = {int(rid): (caches, ParkMeta(*[int(x) for x in meta]))
+                      for rid, caches, meta in snap["tier"]}
+        self._ready_at = {int(rid): float(t)
+                          for rid, t in snap["ready_at"]}
+        self.bytes_moved = float(snap["bytes_moved"])
 
     @property
     def in_flight(self) -> int:

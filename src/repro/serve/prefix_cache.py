@@ -185,6 +185,33 @@ class PrefixCache:
         while self.evict_one():
             pass
 
+    # -- crash recovery (DESIGN.md §9) -----------------------------------
+    def export_state(self, encode: Callable[[Any], Any] = lambda p: p
+                     ) -> dict:
+        """Entries in LRU order (OrderedDict iteration order) plus hit
+        accounting; `encode` is the backend's payload codec
+        (`KVBackend.snapshot_payload`)."""
+        return {
+            "entries": [[key, entry.parent or "", encode(entry.payload)]
+                        for key, entry in self._d.items()],
+            "stats": [int(self.hits), int(self.misses),
+                      int(self.hash_ops), int(self.tokens_reused)],
+        }
+
+    def import_state(self, snap: dict,
+                     decode: Callable[[Any], Any] = lambda p: p) -> None:
+        """Rebuild chains in recorded LRU order WITHOUT the retain hook:
+        pool refcounts are restored wholesale by `KVBackend.import_state`,
+        so retaining here would double-count every cached page."""
+        self._d.clear()
+        for key, parent, data in snap["entries"]:
+            self._d[key] = _Entry(decode(data), parent or None)
+        for key, entry in self._d.items():
+            if entry.parent is not None and entry.parent in self._d:
+                self._d[entry.parent].children.add(key)
+        self.hits, self.misses, self.hash_ops, self.tokens_reused = \
+            [int(x) for x in snap["stats"]]
+
     @property
     def hit_rate(self) -> float:
         n = self.hits + self.misses

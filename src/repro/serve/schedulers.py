@@ -15,7 +15,7 @@ scheduler defined entirely outside src/.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Tuple
 
 from repro.core.multiqueue import HostMultiQueue
 from repro.serve.api import Request, register_scheduler
@@ -36,6 +36,21 @@ class _MultiQueueScheduler:
 
     # a requeued request is not a new arrival: same class, tail of queue
     requeue = submit
+
+    # -- crash recovery (DESIGN.md §9) ----------------------------------
+    def export(self) -> Tuple[List[List[Request]], dict]:
+        """Queued work per class in pop order, without disturbing it."""
+        return [self.mq.items(q) for q in range(self.n_classes)], {}
+
+    def import_(self, queues: List[List[Request]], aux: dict) -> None:
+        """Load exported queues into this (fresh) scheduler verbatim —
+        requests go back to the recorded class, not through `class_of`,
+        so a restore round-trips exactly even for exotic mappings."""
+        for q, reqs in enumerate(queues):
+            for req in reqs:
+                if not self.mq.push(q, req):
+                    raise RuntimeError(
+                        f"scheduler import overflow at class {q}")
 
     @property
     def pending(self) -> int:
@@ -89,3 +104,12 @@ class RoundRobinScheduler(_MultiQueueScheduler):
         if item is not None:
             self._cursor = (q + 1) % self.n_classes
         return item
+
+    def export(self) -> Tuple[List[List[Request]], dict]:
+        queues, aux = super().export()
+        aux["cursor"] = int(self._cursor)
+        return queues, aux
+
+    def import_(self, queues: List[List[Request]], aux: dict) -> None:
+        super().import_(queues, aux)
+        self._cursor = int(aux.get("cursor", 0))

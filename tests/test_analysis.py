@@ -339,6 +339,110 @@ def test_jz005_conforming_and_inherited_members(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# JZ006 — snapshot manifest completeness
+# ---------------------------------------------------------------------------
+
+def test_jz006_missing_manifest(tmp_path):
+    root = write_tree(tmp_path, {"serve/eng.py": """\
+        class Engine:
+            def __init__(self):
+                self.state = {}
+
+            def snapshot(self):
+                return {"state": self.state}
+        """})
+    found = lint([root], rules=["JZ006"]).unsuppressed
+    assert len(found) == 1
+    assert "no class-level `_SNAPSHOT_FIELDS`" in found[0].message
+    assert found[0].line == line_of(root, "serve/eng.py", "class Engine")
+
+
+def test_jz006_unlisted_attr_fires_at_assignment(tmp_path):
+    root = write_tree(tmp_path, {"serve/eng.py": """\
+        class Engine:
+            _SNAPSHOT_FIELDS = {"state": "captured"}
+
+            def __init__(self):
+                self.state = {}
+                self.forgotten = []       # not in the manifest
+
+            def snapshot(self):
+                return {"state": self.state}
+        """})
+    found = lint([root], rules=["JZ006"]).unsuppressed
+    assert len(found) == 1
+    assert "`self.forgotten`" in found[0].message
+    assert found[0].line == line_of(root, "serve/eng.py",
+                                    "not in the manifest")
+
+
+def test_jz006_clean_manifest_and_non_snapshot_classes(tmp_path):
+    """A complete manifest (dict or tuple form) is clean; classes
+    without a snapshot() method are never in scope."""
+    root = write_tree(tmp_path, {"serve/eng.py": """\
+        class Engine:
+            _SNAPSHOT_FIELDS = {"a": "config", "b": "captured"}
+
+            def __init__(self):
+                self.a = 1
+                self.b = 2
+
+            def snapshot(self):
+                return {"b": self.b}
+
+        class TupleEngine:
+            _SNAPSHOT_FIELDS = ("x",)
+
+            def __init__(self):
+                self.x = 0
+
+            def snapshot(self):
+                return {"x": self.x}
+
+        class Plain:                      # no snapshot(): out of scope
+            def __init__(self):
+                self.whatever = None
+        """})
+    assert lint([root], rules=["JZ006"]).clean
+
+
+def test_jz006_dynamic_manifest_rejected(tmp_path):
+    root = write_tree(tmp_path, {"serve/eng.py": """\
+        FIELDS = {"state": "captured"}
+
+        class Engine:
+            _SNAPSHOT_FIELDS = FIELDS     # not statically readable
+
+            def __init__(self):
+                self.state = {}
+
+            def snapshot(self):
+                return {"state": self.state}
+        """})
+    found = lint([root], rules=["JZ006"]).unsuppressed
+    assert len(found) == 1
+    assert "statically checkable" in found[0].message
+
+
+def test_jz006_live_engine_manifest_complete():
+    """The real ServingEngine declares every __init__ attribute; seeding
+    an undeclared one into the real source must fire."""
+    assert lint([SRC / "repro" / "serve"], rules=["JZ006"]).clean
+
+
+def test_jz006_seeded_forgotten_field(tmp_path):
+    engine_src = (SRC / "repro" / "serve" / "engine.py").read_text()
+    leaky = engine_src.replace(
+        "self.cfg = cfg",
+        "self.cfg = cfg\n        self.sneaky = []  # seeded leak", 1)
+    assert leaky != engine_src
+    root = write_tree(tmp_path, {"serve/engine.py": leaky})
+    found = lint([root], rules=["JZ006"]).unsuppressed
+    assert len(found) == 1
+    assert "`self.sneaky`" in found[0].message
+
+
+# ---------------------------------------------------------------------------
 # frame: suppressions, baseline, registry
 # ---------------------------------------------------------------------------
 

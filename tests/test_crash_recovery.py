@@ -1,0 +1,309 @@
+"""Crash-anywhere serving (DESIGN.md §9).
+
+The acceptance property: crash+restore injected at ANY engine step
+boundary — both KV layouts, decode_span 1 and 8 — leaves every client
+stream byte-identical to the fault-free run, preserves
+`host_syncs == prefills + decode_spans`, and strands zero requests.
+Plus the recovery-policy split (snapshot vs replay-from-zero), stale
+snapshots, cold restarts, randomized mixed fault schedules, fault
+injector determinism, and persistence of snapshots through the
+Checkpointer manifest format across a simulated process restart.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, pack_tree, \
+    unpack_tree
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.ft import crash_anywhere_sweep, drive, random_schedule
+from repro.ft.chaos import build_stack
+from repro.models import lm
+from repro.serve.api import Request
+from repro.serve.loadgen import TraceSpec, make_trace
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+SPEC = TraceSpec(arrival="bursty", rate=0.5, burst=3.0, seed=5,
+                 prompt_lens=((1.0, 6, 18),),
+                 output_lens=((1.0, 4, 10),),
+                 qos_weights=(1.0, 1.0))
+
+
+def _trace_fn(vocab, n=4):
+    """A fresh-copy trace factory (Requests mutate as they run)."""
+    return lambda: make_trace(SPEC, n, vocab)
+
+
+def _ecfg_kw(**over):
+    kw = dict(slots=3, cache_len=96, kv_layout="paged", n_pages=64,
+              page_size=8, decode_span=2, eos_token=-1,
+              scheduler="priority", qos_classes=2, admit_capacity=64)
+    kw.update(over)
+    return kw
+
+
+def _fresh_reqs(vocab, n=4, seed=9):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(1, vocab, size=int(
+                        rng.integers(6, 14))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(4, 9)), qos=i % 2)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance sweep: crash at EVERY boundary, both layouts x spans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout,span", [
+    ("paged", 1), ("paged", 8), ("dense", 1), ("dense", 8)])
+def test_crash_anywhere_every_boundary(tiny, layout, span):
+    cfg, params = tiny
+    kw = _ecfg_kw(kv_layout=layout, decode_span=span)
+    clean, reports = crash_anywhere_sweep(
+        cfg, params, kw, _trace_fn(cfg.vocab_size, n=6))
+    assert clean.steps >= 3 and len(reports) == clean.steps
+    assert all(len(r.crash_log) == 1 for r in reports)
+    # every request reached a terminal outcome in every crashed run
+    assert all(set(r.outcomes) == set(clean.outcomes) for r in reports)
+
+
+# ---------------------------------------------------------------------------
+# recovery policies: stale snapshot, replay-from-zero, cold restart
+# ---------------------------------------------------------------------------
+
+def test_stale_snapshot_restore_dedupes(tiny):
+    """snapshot_every > 1 leaves a stale snapshot: the restore rewinds
+    the engine several steps and the handles dedupe the re-emitted
+    tokens — streams stay byte-identical."""
+    cfg, params = tiny
+    kw = _ecfg_kw()
+    clean = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)())
+    at = max(4, clean.steps // 2)
+    r = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)(),
+              crash_at=(at,), snapshot_every=3)
+    assert r.crash_log[0]["restored_from"] == (at // 3) * 3
+    assert r.streams == clean.streams
+    assert r.outcomes == clean.outcomes
+
+
+def test_per_class_recovery_policy(tiny):
+    """policy=("snapshot", "replay"): class 0 resumes from restored KV,
+    class 1 replays from token zero — only class-1 requests appear in
+    the crash log's replayed list, and streams stay identical."""
+    cfg, params = tiny
+    kw = _ecfg_kw()
+    clean = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)())
+    at = max(2, clean.steps // 2)
+    r = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)(),
+              crash_at=(at,), policy=("snapshot", "replay"))
+    assert r.streams == clean.streams
+    qos_of = {ev[1].req_id: int(ev[1].qos)
+              for ev in _trace_fn(cfg.vocab_size)()}
+    for entry in r.crash_log:
+        for rid in entry["replayed"]:
+            assert qos_of[rid] == 1, (rid, entry)
+
+
+def test_replay_all_policy(tiny):
+    """policy=("replay",) broadcasts: every occupied slot replays from
+    zero (the SR analog, zero snapshot-byte dependence)."""
+    cfg, params = tiny
+    kw = _ecfg_kw()
+    clean = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)())
+    at = max(2, clean.steps // 2)
+    r = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)(),
+              crash_at=(at,), policy=("replay",))
+    assert r.streams == clean.streams
+    assert r.engine_stats["preempt_restarts"] >= \
+        clean.engine_stats["preempt_restarts"]
+
+
+def test_cold_restart_no_snapshot(tiny):
+    """snapshot_every=0: the successor engine starts empty, the frontend
+    requeues every lost handle at the front of its class queue, and
+    dedupe still yields byte-identical streams."""
+    cfg, params = tiny
+    kw = _ecfg_kw()
+    clean = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)())
+    at = max(2, clean.steps // 2)
+    r = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)(),
+              crash_at=(at,), snapshot_every=0)
+    assert r.crash_log[0]["restored_from"] is None
+    assert r.streams == clean.streams
+    assert r.outcomes == clean.outcomes
+
+
+def test_unknown_recovery_policy_rejected(tiny):
+    from repro.ft import policy_of
+    with pytest.raises(ValueError, match="unknown recovery policy"):
+        policy_of(0, ("teleport",))
+    assert policy_of(5, ("snapshot", "replay")) == "replay"   # broadcast
+    assert policy_of(0, ("gbn",)) == "snapshot"               # alias
+    assert policy_of(0, ()) == "snapshot"                     # default
+
+
+# ---------------------------------------------------------------------------
+# mixed chaos: crash + park storm + kill, seeded schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_randomized_mixed_chaos(tiny, seed):
+    cfg, params = tiny
+    kw = _ecfg_kw()
+    clean = drive(cfg, params, kw, _trace_fn(cfg.vocab_size, n=5)())
+    sched = random_schedule(seed, clean.steps)
+    r = drive(cfg, params, kw, _trace_fn(cfg.vocab_size, n=5)(),
+              fault_seed=seed, **sched)
+    assert r.streams == clean.streams, sched
+    assert r.outcomes == clean.outcomes, sched
+    assert len(r.crash_log) == len(set(sched["crash_at"]))
+
+
+def test_fault_injector_deterministic(tiny):
+    """Satellite: same seed + same schedule => identical victim choices
+    and an identical fault log, run to run."""
+    cfg, params = tiny
+    kw = _ecfg_kw()
+    runs = [drive(cfg, params, kw, _trace_fn(cfg.vocab_size, n=5)(),
+                  park_storm_at=(5,), kill_at=(7, 11), fault_seed=13)
+            for _ in range(2)]
+    assert runs[0].fault_log == runs[1].fault_log
+    assert runs[0].streams == runs[1].streams
+    assert runs[0].engine_stats == runs[1].engine_stats
+
+
+def test_fault_with_no_victims_logs_explicit_empty(tiny):
+    """Satellite: a scheduled fault that finds no eligible slot must
+    leave an explicit `"slots": []` entry, never a silent no-op — so
+    stream-identity asserts can't pass vacuously."""
+    cfg, params = tiny
+    kw = _ecfg_kw()
+    # step 0 fires before the first engine step: nothing is running yet
+    r = drive(cfg, params, kw, _trace_fn(cfg.vocab_size)(),
+              park_storm_at=(0,), kill_at=(0,))
+    assert {"step": 0, "fault": "park_storm", "slots": []} in r.fault_log
+    assert {"step": 0, "fault": "kill", "slots": []} in r.fault_log
+
+
+# ---------------------------------------------------------------------------
+# restore guards
+# ---------------------------------------------------------------------------
+
+def test_restore_rejects_mismatched_config_and_version(tiny):
+    cfg, params = tiny
+    fe, _ = build_stack(cfg, params, _ecfg_kw())
+    snap = fe.engine.snapshot()
+    fe2, _ = build_stack(cfg, params, _ecfg_kw(decode_span=4))
+    with pytest.raises(ValueError, match="config mismatch"):
+        fe2.engine.restore(snap)
+    bad = dict(snap, version=99)
+    with pytest.raises(ValueError, match="version"):
+        fe.engine.restore(bad)
+
+
+# ---------------------------------------------------------------------------
+# persistence: snapshot -> Checkpointer manifest -> fresh engine
+# ---------------------------------------------------------------------------
+
+def test_snapshot_persists_and_resumes_from_disk(tiny, tmp_path):
+    """Mid-run async save to disk, then a simulated process restart: a
+    fresh engine + fresh Checkpointer over the directory resumes and
+    finishes with byte-identical streams."""
+    cfg, params = tiny
+    kw = _ecfg_kw()
+
+    fe_ref, _ = build_stack(cfg, params, kw)
+    ref_handles = [fe_ref.submit(r) for r in _fresh_reqs(cfg.vocab_size)]
+    fe_ref.run(max_steps=500)
+    ref = {h.req.req_id: tuple(h.streamed) for h in ref_handles}
+
+    fe, rebuild = build_stack(cfg, params, kw)
+    handles = [fe.submit(r) for r in _fresh_reqs(cfg.vocab_size)]
+    for _ in range(6):
+        fe.step()
+    ckpt = Checkpointer(tmp_path / "snaps")
+    fe.engine.save_snapshot(ckpt, step=6, blocking=False)  # async path
+    ckpt.wait()      # clean process exit = atexit flush of the writer
+
+    eng2 = rebuild()                                 # "new process"
+    snap = eng2.load_snapshot(Checkpointer(tmp_path / "snaps"))
+    assert snap["version"] == 1
+    fe.reattach(eng2)
+    fe.run(max_steps=500)
+    assert {h.req.req_id: tuple(h.streamed) for h in handles} == ref
+    s = eng2.stats
+    assert s["host_syncs"] == s["prefills"] + s["decode_spans"]
+
+
+def test_pack_tree_round_trip():
+    tree = {"a": np.arange(4, dtype=np.int32), "b": [None, True, 2.5],
+            "c": {"d": np.ones((2, 2), dtype=np.float32), "e": "x"},
+            "t": (1, np.zeros(3, np.bool_))}
+    leaves, meta = pack_tree(tree)
+    assert len(leaves) == 3
+    back = unpack_tree(meta, leaves)
+    assert back["b"] == [None, True, 2.5] and back["c"]["e"] == "x"
+    assert back["t"][0] == 1                # tuples come back as lists
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    assert back["c"]["d"].dtype == np.float32
+    with pytest.raises(TypeError, match="str dict keys"):
+        pack_tree({1: "bad"})
+    with pytest.raises(TypeError, match="cannot encode"):
+        pack_tree({"f": object()})
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer: serialized async saves + error propagation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_checkpointer_serializes_async_saves(tmp_path):
+    """Back-to-back async saves never interleave: every surviving step
+    directory is complete and readable, and load() never reads past an
+    in-flight write."""
+    ckpt = Checkpointer(tmp_path / "ck", keep=3)
+    for s in range(1, 6):
+        ckpt.save(s, [np.full(8, s)], extra={"s": s}, blocking=False)
+    meta, leaves = ckpt.load()              # waits for the last write
+    assert meta["step"] == 5 and meta["extra"]["s"] == 5
+    np.testing.assert_array_equal(leaves[0], np.full(8, 5))
+    assert latest_step(tmp_path / "ck") == 5
+    kept = sorted(p.name for p in (tmp_path / "ck").glob("step_*"))
+    assert kept == ["step_00000003", "step_00000004", "step_00000005"]
+    for p in (tmp_path / "ck").glob("step_*"):
+        assert (p / "manifest.json").exists() and (p / "shards.npz").exists()
+
+
+def test_checkpointer_resave_same_step_replaces(tmp_path):
+    """Saving the same step twice (periodic save landing on the final
+    save's step) replaces the directory instead of failing the rename."""
+    ckpt = Checkpointer(tmp_path / "ck")
+    ckpt.save(4, [np.full(4, 1)], extra={"v": 1}, blocking=False)
+    ckpt.save(4, [np.full(4, 2)], extra={"v": 2}, blocking=True)
+    meta, leaves = ckpt.load()
+    assert meta["step"] == 4 and meta["extra"]["v"] == 2
+    np.testing.assert_array_equal(leaves[0], np.full(4, 2))
+
+
+def test_checkpointer_async_error_surfaces(tmp_path):
+    """A failed background write must raise at the next save/wait, not
+    vanish with the daemon thread."""
+    ckpt = Checkpointer(tmp_path / "ck")
+    blocker = tmp_path / "ck" / "blocker"
+    blocker.write_text("")
+    ckpt.dir = blocker                      # writes now land under a FILE
+    ckpt.save(1, [np.arange(3)], blocking=False)
+    with pytest.raises(OSError):
+        ckpt.wait()
+    ckpt.dir = tmp_path / "ck"              # error consumed; usable again
+    ckpt.save(2, [np.arange(3)], blocking=False)
+    ckpt.wait()
+    assert latest_step(tmp_path / "ck") == 2

@@ -144,6 +144,12 @@ def test_third_party_scheduler_via_registry(tiny):
         def next(self):
             return self._stack.pop() if self._stack else None
 
+        def export(self):
+            return [list(self._stack)], {}
+
+        def import_(self, queues, aux):
+            self._stack = [r for q in queues for r in q]
+
         @property
         def pending(self):
             return len(self._stack)
