@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint bench-smoke bench-sched bench-prefill bench-decode \
-	bench-sample bench-load bench-reliability bench quickstart
+	bench-sample bench-load bench-reliability bench-footprint bench \
+	quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -33,6 +34,9 @@ bench-load:
 
 bench-reliability:
 	$(PY) benchmarks/reliability.py --smoke
+
+bench-footprint:
+	$(PY) benchmarks/module_footprint.py
 
 bench:
 	$(PY) benchmarks/run.py

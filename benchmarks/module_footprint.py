@@ -2,7 +2,12 @@
 
 The paper reports LUT/FF/BRAM per block; the TPU counterparts are
 parameter bytes, per-device HBM state, and the Pallas kernels' VMEM
-working sets (BlockSpec tiles + scratch).
+working sets (BlockSpec tiles + scratch). The decode-state table
+(`decode_state_rows`, DESIGN.md §10) is this PR's headline: per
+architecture and StateBackend layout, decode-state bytes per slot at a
+32k context and the resident-slot count a fixed HBM budget buys —
+dense/paged full KV vs the MLA latent cache vs constant-size recurrent
+carries.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_config
 from repro.models import lm
+from repro.models import transformer as tf
 
 
 def _tree_bytes(t):
@@ -29,6 +35,49 @@ def kernel_vmem(block_q=128, block_k=128, hd=128, page=16, G=4,
             "linear_scan": ls}
 
 
+DECODE_LEN = 32768            # per-slot context for the state table
+PAGE = 16
+HBM_BUDGET = 8 << 30          # resident-slot column: slots per 8 GiB
+
+
+def decode_state_rows(archs=("qwen3-8b", "deepseek-v2-lite-16b",
+                             "rwkv6-1.6b", "jamba-v0.1-52b"),
+                      decode_len: int = DECODE_LEN,
+                      hbm: int = HBM_BUDGET) -> str:
+    """The headline table: decode-state bytes/slot per StateBackend
+    layout, and how many slots a fixed HBM budget keeps resident.
+    Everything is eval_shape'd — no arrays are materialized."""
+    rows = ["arch,layout,state_bytes_per_slot,slots_at_8GiB"]
+    for arch in archs:
+        cfg = get_config(arch)
+        per = {}
+        st = jax.eval_shape(
+            lambda c=cfg: lm.init_serve_state(c, 1, decode_len))
+        per["dense"] = _tree_bytes(st["caches"])
+        npg = decode_len // PAGE
+        if tf.paged_stack_supported(cfg):
+            ps = jax.eval_shape(lambda c=cfg: lm.init_paged_serve_state(
+                c, 1, npg, PAGE, npg))
+            per["paged"] = _tree_bytes(ps["caches"])
+        if tf.latent_paged_stack_supported(cfg):
+            ps = jax.eval_shape(lambda c=cfg: lm.init_paged_serve_state(
+                c, 1, npg, PAGE, npg))
+            per["latent"] = _tree_bytes(ps["caches"])
+            # the comparator the latent cache is ~1/10th of: full
+            # per-head K/V pages at the same head geometry
+            m = cfg.mla
+            itemsize = jnp.dtype(cfg.dtype).itemsize
+            full = (cfg.n_layers * decode_len * cfg.n_heads
+                    * (m.qk_nope_dim + m.qk_rope_dim + m.v_head_dim)
+                    * itemsize)
+            per["full_kv_equiv"] = full
+        if tf.recurrent_state_supported(cfg):
+            per["recurrent"] = per.pop("dense")   # same constant carries
+        for layout, nbytes in per.items():
+            rows.append(f"{arch},{layout},{nbytes},{hbm // max(nbytes, 1)}")
+    return "\n".join(rows)
+
+
 def run():
     rows = ["module,metric,bytes"]
     for arch in ("qwen3-8b", "deepseek-v2-lite-16b", "rwkv6-1.6b"):
@@ -45,7 +94,7 @@ def run():
                     f"{_tree_bytes(state['caches'])}")
     for k, v in kernel_vmem().items():
         rows.append(f"kernel/{k},vmem_per_step,{v}")
-    return "\n".join(rows)
+    return "\n".join(rows) + "\n\n" + decode_state_rows()
 
 
 def main():

@@ -24,6 +24,9 @@ def main() -> None:
     smoke = "--smoke" in sys.argv
     if smoke:
         sections = [
+            # eval_shape only — fast enough for CI, and the per-backend
+            # decode-state table is the StateBackend refactor's headline
+            ("table2_module_footprint", module_footprint.run),
             ("sec3_chunked_prefill", lambda: chunked_prefill.run(smoke=True)),
             ("sec3_decode_spans",
              lambda: decode_throughput.run(smoke=True)),

@@ -109,12 +109,16 @@ def crash_anywhere_sweep(cfg, params, ecfg_kw: dict,
                          snapshot_every: int = 1,
                          policy: Tuple[str, ...] = (),
                          boundaries: Optional[Iterable[int]] = None,
-                         step_dt: float = 1.0
+                         step_dt: float = 1.0,
+                         backend: Optional[str] = None
                          ) -> Tuple[ChaosReport, List[ChaosReport]]:
     """Crash at every step boundary of the clean run (or the given
     subset), asserting each crashed run's client streams byte-identical
     to the fault-free run. `trace_fn` regenerates the reference trace
-    for each run."""
+    for each run. `backend` overrides the StateBackend layout, so one
+    trace sweeps the invariant over dense/paged/latent/recurrent."""
+    if backend is not None:
+        ecfg_kw = dict(ecfg_kw, kv_layout=backend)
     clean = drive(cfg, params, ecfg_kw, trace_fn(), step_dt=step_dt)
     bounds = list(boundaries) if boundaries is not None \
         else list(range(clean.steps))

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels import (flash_attention as _fa, linear_scan as _ls,
                            moe_dispatch as _md, paged_attention as _pd,
-                           sampling as _sp, wkv6 as _wkv)
+                           sampling as _sp, ssm_decode as _ssd,
+                           wkv6 as _wkv)
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -63,3 +64,16 @@ def wkv6_chunked(r, k, v, logw, u, state0, *, chunk=32,
                  interpret: Optional[bool] = None):
     return _wkv.wkv6_chunked(r, k, v, logw, u, state0, chunk=chunk,
                              interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def wkv6_decode(r, k, v, w, u, state, *, interpret: Optional[bool] = None):
+    return _wkv.wkv6_decode(r, k, v, w, u, state,
+                            interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_decode_step(h, dA, dtx, B_ssm, C_ssm, *, block_d=256,
+                    interpret: Optional[bool] = None):
+    return _ssd.ssm_decode_step(h, dA, dtx, B_ssm, C_ssm, block_d=block_d,
+                                interpret=_auto_interpret(interpret))

@@ -92,6 +92,21 @@ def wkv6_ref(r, k, v, logw, u, state0):
     return ys.transpose(1, 0, 2, 3), S_last
 
 
+def wkv6_decode_ref(r, k, v, w, u, state):
+    """Single-token WKV-6 step. r,k,v,w: [B,H,hd]; u: [H,hd];
+    state: [B,H,hd,hd] — the t=1 slice of `wkv6_ref`'s recurrence."""
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    y = jnp.einsum("bhd,bhde->bhe", r, state + u[None, ..., None] * kv)
+    return y, w[..., None] * state + kv
+
+
+def ssm_decode_step_ref(h, dA, dtx, B_ssm, C_ssm):
+    """Single-token S6 step. h, dA: [B,Di,N]; dtx: [B,Di]; B_ssm, C_ssm:
+    [B,N] — the T=1 slice of `linear_scan_ref` with the C contraction."""
+    h_new = dA * h + dtx[..., None] * B_ssm[:, None, :]
+    return jnp.einsum("bdn,bn->bd", h_new, C_ssm), h_new
+
+
 def sample_logits_ref(logits, keys, temperature, top_k, top_p):
     """Naive per-row sampling reference: each filter applied as its own
     separate step (scale, top-k cut, top-p nucleus over the renormalized

@@ -1,0 +1,71 @@
+"""Pallas TPU single-token SSM (Mamba S6) decode step.
+
+The serving-path counterpart of `linear_scan`: one grid program per
+(batch, channel block) applies the discretized state update
+``h' = dA ⊙ h + (dt·x) Bᵀ`` on its [Dblk, N] state plane and contracts
+against C for the output — the whole per-token recurrence stays in VMEM
+with no sequence axis at all (models/mamba.py `mamba_decode` is the
+pure-jnp derivation this mirrors).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_dec_kernel(h_ref, da_ref, dx_ref, b_ref, c_ref, y_ref, hout_ref):
+    h = h_ref[0].astype(jnp.float32)             # [Dblk, N]
+    da = da_ref[0].astype(jnp.float32)
+    dx = dx_ref[...].astype(jnp.float32)         # [1, Dblk]
+    bs = b_ref[...].astype(jnp.float32)          # [1, N]
+    cs = c_ref[...].astype(jnp.float32)          # [1, N]
+    hn = da * h + dx[0][:, None] * bs            # [Dblk,1]*[1,N] outer
+    y = jax.lax.dot_general(cs, hn, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [1, Dblk]
+    y_ref[...] = y.astype(y_ref.dtype)
+    hout_ref[0] = hn.astype(hout_ref.dtype)
+
+
+def ssm_decode_step(h, dA, dtx, B_ssm, C_ssm, *, block_d: int = 256,
+                    interpret: bool = False):
+    """h, dA: [B,Di,N]; dtx (= dt·x_conv): [B,Di]; B_ssm, C_ssm: [B,N].
+
+    Returns (y [B,Di] f32, h' [B,Di,N] f32) with
+    ``h' = dA ⊙ h + dtx ⊗ B_ssm`` and ``y = h' C_ssmᵀ``.
+    """
+    B, Di, N = h.shape
+    block_d = min(block_d, Di)
+    assert Di % block_d == 0, (Di, block_d)
+    nd = Di // block_d
+
+    def st_map(i, j):
+        return (i, j, 0)
+
+    def d_map(i, j):
+        return (i, j)
+
+    def n_map(i, j):
+        return (i, 0)
+
+    y, h_out = pl.pallas_call(
+        _ssm_dec_kernel,
+        grid=(B, nd),
+        in_specs=[
+            pl.BlockSpec((1, block_d, N), st_map),
+            pl.BlockSpec((1, block_d, N), st_map),
+            pl.BlockSpec((1, block_d), d_map),
+            pl.BlockSpec((1, N), n_map),
+            pl.BlockSpec((1, N), n_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_d), d_map),
+            pl.BlockSpec((1, block_d, N), st_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Di), jnp.float32),
+            jax.ShapeDtypeStruct((B, Di, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, dA, dtx, B_ssm, C_ssm)
+    return y, h_out

@@ -63,6 +63,59 @@ def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sout_ref,
         sout_ref[0] = state_scr[...].astype(sout_ref.dtype)
 
 
+def _wkv_decode_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s_ref,
+                       y_ref, sout_ref):
+    r = r_ref[...].astype(jnp.float32)           # [1, hd]
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    S = s_ref[0].astype(jnp.float32)             # [hd, hd]
+    # y_e = Σ_d r_d (S_de + u_d k_d v_e);  S'_de = w_d S_de + k_d v_e
+    kv = k[0][:, None] * v                       # [hd, hd] rank-1 outer
+    y = jax.lax.dot_general(r, S + (u[0] * k[0])[:, None] * v,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [1, hd]
+    y_ref[...] = y.astype(y_ref.dtype)
+    sout_ref[0] = (w[0][:, None] * S + kv).astype(sout_ref.dtype)
+
+
+def wkv6_decode(r, k, v, w, u, state, *, interpret: bool = False):
+    """Single-token WKV-6 step (the serving decode recurrence, O(hd²)).
+
+    r, k, v, w: [B,H,hd] (w is the per-channel decay multiplier, already
+    exp(-exp(...))); u: [H,hd]; state: [B,H,hd,hd].
+    Returns (y [B,H,hd] f32, state' [B,H,hd,hd] f32).
+    """
+    B, H, hd = r.shape
+    rf, kf, vf, wf = (t.reshape(B * H, hd) for t in (r, k, v, w))
+    uf = jnp.tile(u, (B, 1)).reshape(B * H, hd)
+    sf = state.reshape(B * H, hd, hd)
+
+    def vec_map(bh):
+        return (bh, 0)
+
+    def st_map(bh):
+        return (bh, 0, 0)
+
+    y, s_out = pl.pallas_call(
+        _wkv_decode_kernel,
+        grid=(B * H,),
+        in_specs=[pl.BlockSpec((1, hd), vec_map)] * 5
+        + [pl.BlockSpec((1, hd, hd), st_map)],
+        out_specs=[
+            pl.BlockSpec((1, hd), vec_map),
+            pl.BlockSpec((1, hd, hd), st_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, sf)
+    return y.reshape(B, H, hd), s_out.reshape(B, H, hd, hd)
+
+
 def wkv6_chunked(r, k, v, logw, u, state0, *, chunk: int = 32,
                  interpret: bool = False):
     """r,k,v,logw: [B,S,H,hd]; u: [H,hd]; state0: [B,H,hd,hd].

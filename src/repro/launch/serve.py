@@ -149,8 +149,12 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=160)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--kv-layout", choices=("dense", "paged"),
-                    default="dense", help="KVBackend name")
+    ap.add_argument("--kv-layout",
+                    choices=("dense", "paged", "latent", "recurrent"),
+                    default="dense",
+                    help="StateBackend name: dense serves every config; "
+                         "paged needs plain attention; latent needs "
+                         "all-MLA; recurrent needs pure RWKV/Mamba")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=0,
                     help="device page budget; 0 derives it from "

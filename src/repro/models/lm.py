@@ -266,9 +266,15 @@ def prefill_chunk(params, tokens, caches, start, n_valid, cfg: ModelConfig,
     Chaining chunks over a prompt is logit-identical to `prefill`.
     """
     if not tf.chunked_prefill_supported(cfg):
+        # name the capability that's actually missing: this path extends
+        # per-token dense K/V rows in place, which MLA latent caches, SWA
+        # rings, and recurrent (mamba/rwkv) carries don't expose
+        kinds = sorted(set(cfg.layer_kinds()))
         raise ValueError(
-            f"chunked prefill requires a pure-attention config "
-            f"(no MLA/SWA/mamba/rwkv); got {cfg.name}")
+            f"chunked prefill needs per-token dense attention caches that "
+            f"extend row-by-row; {cfg.name} (layer kinds {kinds}, "
+            f"mla={cfg.mla is not None}, swa_window={cfg.swa_window}) "
+            f"doesn't expose them — use monolithic prefill")
     x = embed(params["embed"], tokens, policy)
     ctx = {"mode": "prefill_chunk", "start": start}
     x, caches, _ = tf.apply_stack(params["stack"], x, cfg, policy, ctx,
@@ -420,20 +426,34 @@ def init_paged_serve_state(cfg: ModelConfig, batch: int, n_pages: int,
                            tp: int = 1) -> dict:
     """Paged decoding state: shared per-layer page pools + per-slot MTT.
 
-    ``caches`` leaves are [n_pages, page_size, KV, hd] pools shared by all
-    `batch` slots; ``page_table`` [batch, max_pages] names each slot's
-    pages in token order (rows are rewritten by the engine as the PagePool
-    allocates on append). Total pool memory is n_pages*page_size tokens —
-    the budget the engine admits against — independent of `batch`.
+    ``caches`` leaves are [n_pages, page_size, KV, hd] pools (plain
+    attention) or [n_pages, page_size, lora|rope] latent pools (MLA)
+    shared by all `batch` slots; ``page_table`` [batch, max_pages] names
+    each slot's pages in token order (rows are rewritten by the engine as
+    the PagePool allocates on append). Total pool memory is
+    n_pages*page_size tokens — the budget the engine admits against —
+    independent of `batch`.
     """
-    if not tf.paged_stack_supported(cfg):
-        raise ValueError(
-            f"paged KV serving requires a pure-attention config "
-            f"(no MLA/SWA/mamba/rwkv); got {cfg.name}")
     dtype = dtype or jnp.dtype(cfg.dtype)
+    if tf.paged_stack_supported(cfg):
+        caches = tf.init_paged_stack_caches(cfg, n_pages, page_size,
+                                            dtype, tp=tp)
+    elif tf.latent_paged_stack_supported(cfg):
+        caches = tf.init_latent_paged_stack_caches(cfg, n_pages, page_size,
+                                                   dtype, tp=tp)
+    else:
+        # name the capability that's actually missing: page indirection
+        # needs per-token cache blocks, which SWA rings and recurrent
+        # (mamba/rwkv) carries don't have
+        kinds = sorted(set(cfg.layer_kinds()))
+        raise ValueError(
+            f"paged serving needs per-token cache blocks (plain attention "
+            f"KV or an MLA latent cache, no SWA ring); {cfg.name} (layer "
+            f"kinds {kinds}, swa_window={cfg.swa_window}) has none — use "
+            f"the 'dense' layout (serves every config) or 'recurrent' "
+            f"(constant-size state for pure RWKV/Mamba configs)")
     return {
-        "caches": tf.init_paged_stack_caches(cfg, n_pages, page_size,
-                                             dtype, tp=tp),
+        "caches": caches,
         "lengths": jnp.zeros((batch,), jnp.int32),
         "positions": jnp.zeros((batch,), jnp.int32),
         "page_table": jnp.zeros((batch, max_pages), jnp.int32),

@@ -297,7 +297,15 @@ def apply_block(p, x, kind: str, mlp_kind: str, cfg: ModelConfig, policy,
     if kind == "attn":
         if cfg.mla is not None:
             if mode == "decode":
-                a, new_cache = _mla_decode_wrap(h, p["attn"], cfg, ctx, cache, policy)
+                if ctx.get("page_table") is not None:
+                    # latent pages: absorbed decode through the MTT; the
+                    # scatter drops parked writes, so skip the freeze below
+                    a, new_cache = _mla_decode_paged(h, p["attn"], cfg, ctx,
+                                                     cache, policy)
+                    pool_cache = True
+                else:
+                    a, new_cache = _mla_decode_wrap(h, p["attn"], cfg, ctx,
+                                                    cache, policy)
             else:
                 angles = rope_angles(jnp.arange(x.shape[1]),
                                      cfg.mla.qk_rope_dim, cfg.rope_theta)
@@ -396,6 +404,42 @@ def _mla_decode_wrap(h, p, cfg, ctx, cache, policy):
                                   cache["c_kv"].shape[1])}
     out, new = mla_mod.mla_decode(h, p, cfg, full, ctx["positions"], policy)
     return out, {"c_kv": new["c_kv"], "k_rope": new["k_rope"]}
+
+
+def _mla_decode_paged(h, p, cfg, ctx, cache, policy):
+    """MLA decode against shared latent pages (the "latent" StateBackend).
+
+    cache: {c_kv: [NP, page, lora], k_rope: [NP, page, rope]} — the pool,
+    shared by every slot; ctx carries positions/lengths [B] and
+    page_table [B, MP]. The slot's latent rows are gathered through the
+    table into logical token order, the absorbed-attention math runs on
+    that dense view (same code as the dense MLA path), and only the new
+    token's [lora + rope] row is scattered back into its owning page —
+    parked slots' writes are dropped via an out-of-range page id, the
+    `paged_append` idiom.
+    """
+    table = ctx["page_table"]                          # [B, MP]
+    positions = ctx["positions"]
+    B, MP = table.shape
+    NP, page = cache["c_kv"].shape[:2]
+    c_dense = cache["c_kv"][table].reshape(B, MP * page, -1)
+    r_dense = cache["k_rope"][table].reshape(B, MP * page, -1)
+    full = {"c_kv": c_dense, "k_rope": r_dense,
+            "length": jnp.minimum(ctx["lengths"] + 1, MP * page)}
+    out, new = mla_mod.mla_decode(h, p, cfg, full, positions, policy)
+    bidx = jnp.arange(B)
+    c_new = new["c_kv"][bidx, positions]
+    r_new = new["k_rope"][bidx, positions]
+    pid = table[bidx, positions // page]
+    off = positions % page
+    active = ctx.get("active")
+    if active is not None:
+        pid = jnp.where(active, pid, NP)               # out of range -> drop
+    c_p = cache["c_kv"].at[pid, off].set(
+        c_new.astype(cache["c_kv"].dtype), mode="drop")
+    r_p = cache["k_rope"].at[pid, off].set(
+        r_new.astype(cache["k_rope"].dtype), mode="drop")
+    return out, {"c_kv": c_p, "k_rope": r_p}
 
 
 # --------------------------------------------------------------------------
@@ -532,64 +576,130 @@ def init_paged_stack_caches(cfg: ModelConfig, n_pages: int, page_size: int,
     return caches
 
 
+def init_latent_paged_stack_caches(cfg: ModelConfig, n_pages: int,
+                                   page_size: int, dtype,
+                                   tp: int = 1) -> dict:
+    """Shared latent pools: every MLA layer holds [NP, page, lora] +
+    [NP, page, rope] pools — the absorbed-decode cache of models/mla.py
+    put behind the same MTT indirection as init_paged_stack_caches, at
+    ~[lora + rope] bytes per token instead of 2*KV*hd.
+    """
+    m = cfg.mla
+
+    def one_pool():
+        return {"c_kv": jnp.zeros((n_pages, page_size, m.kv_lora_rank),
+                                  dtype),
+                "k_rope": jnp.zeros((n_pages, page_size, m.qk_rope_dim),
+                                    dtype)}
+
+    prefix, unit, n_groups = plan_layers(cfg)
+    caches: Dict[str, Any] = {"prefix": [], "groups": None}
+    for kind, _ in prefix:
+        caches["prefix"].append(one_pool())
+    if n_groups:
+        one = {f"b{j}": one_pool() for j, _ in enumerate(unit)}
+        caches["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
+    return caches
+
+
 def paged_stack_supported(cfg: ModelConfig) -> bool:
     """Paged KV needs every layer to be plain (non-MLA, non-SWA) attention."""
     return (all(k == "attn" for k in cfg.layer_kinds())
             and cfg.mla is None and cfg.swa_window == 0)
 
 
+def latent_paged_stack_supported(cfg: ModelConfig) -> bool:
+    """Latent pages need every layer to be MLA attention (no SWA ring)."""
+    return (all(k == "attn" for k in cfg.layer_kinds())
+            and cfg.mla is not None and cfg.swa_window == 0)
+
+
+def recurrent_state_supported(cfg: ModelConfig) -> bool:
+    """Constant-size slot state needs every mixer to carry a recurrence
+    (RWKV/Mamba) — any attention layer grows per token."""
+    kinds = set(cfg.layer_kinds())
+    return bool(kinds) and kinds <= {"mamba", "rwkv"}
+
+
 # -- page-granular cache movement (engine: prefill insert, park/unpark) -----
 #
-# Pool leaves are [NP, page, KV, hd] (prefix blocks) or [G, NP, page, KV,
-# hd] (group-scanned blocks); the leading-axis difference is disambiguated
-# by ndim. These tree maps are the engine's only way to touch pool memory:
-# everything moves page-by-page, never as per-slot dense slabs.
+# Pool leaves are [NP, page, ...] (prefix blocks) or [G, NP, page, ...]
+# (group-scanned blocks); whether a leaf carries the leading group axis is
+# decided by which subtree it sits in — NOT by ndim, so the same maps move
+# attention pages ([..., KV, hd] tails) and MLA latent pages ([..., lora] /
+# [..., rope] tails). These tree maps are the engine's only way to touch
+# pool memory: everything moves page-by-page, never as per-slot slabs.
+
+def _map_stack(cache, fn):
+    """Apply ``fn(leaf, grouped)`` across a stack-cache tree, tagging
+    leaves in the scanned ``groups`` subtree with ``grouped=True``."""
+    out: Dict[str, Any] = {
+        "prefix": [jax.tree.map(lambda c: fn(c, False), t)
+                   for t in cache["prefix"]],
+        "groups": None}
+    if cache.get("groups") is not None:
+        out["groups"] = jax.tree.map(lambda c: fn(c, True), cache["groups"])
+    return out
+
+
+def _map_stack2(cache, other, fn):
+    """Two-tree variant of ``_map_stack`` (same structure required)."""
+    out: Dict[str, Any] = {
+        "prefix": [jax.tree.map(lambda c, o: fn(c, o, False), t, u)
+                   for t, u in zip(cache["prefix"], other["prefix"])],
+        "groups": None}
+    if cache.get("groups") is not None:
+        out["groups"] = jax.tree.map(lambda c, o: fn(c, o, True),
+                                     cache["groups"], other["groups"])
+    return out
+
 
 def dense_to_pages(dense_caches, n_pages: int, page_size: int):
     """Chunk a batch-1 dense cache tree into page-granular data.
 
-    dense leaves [1, L, KV, hd] -> [n_pages, page, KV, hd] (grouped leaves
-    keep their leading G). Requires L >= n_pages*page_size (prefill pads
-    to cache_len, so the tail pages beyond `length` are zeros — masked out
+    dense leaves [1, L, ...] -> [n_pages, page, ...] (grouped leaves keep
+    their leading G). Requires L >= n_pages*page_size (prefill pads to
+    cache_len, so the tail pages beyond `length` are zeros — masked out
     by `lengths` at attention time).
     """
-    def one(dense):
-        if dense.ndim == 5:                       # [G, 1, L, KV, hd]
+    def one(dense, grouped):
+        if grouped:                               # [G, 1, L, ...]
             G, _, L = dense.shape[:3]
             tail = dense.shape[3:]
             return dense[:, 0].reshape(
                 (G, L // page_size, page_size) + tail)[:, :n_pages]
-        _, L = dense.shape[:2]                    # [1, L, KV, hd]
+        _, L = dense.shape[:2]                    # [1, L, ...]
         tail = dense.shape[2:]
         return dense[0].reshape(
             (L // page_size, page_size) + tail)[:n_pages]
-    return jax.tree.map(one, dense_caches)
+    return _map_stack(dense_caches, one)
 
 
 def pages_to_dense(page_caches, cache_len: int, page_size: int):
     """Inverse of ``dense_to_pages``: page-granular data (token order) back
     to a batch-1 dense cache tree zero-padded to ``cache_len``.
 
-    page leaves [P, page, KV, hd] -> [1, cache_len, KV, hd] (grouped
-    leaves [G, P, page, KV, hd] -> [G, 1, cache_len, KV, hd]). Used by the
+    page leaves [P, page, ...] -> [1, cache_len, ...] (grouped leaves
+    [G, P, page, ...] -> [G, 1, cache_len, ...]). Used by the
     chunked-prefill path to stage a paged slot's prefix as the dense cache
     `attn_prefill_chunk` extends.
     """
-    def one(p):
-        if p.ndim == 5:                           # [G, P, page, KV, hd]
+    def one(p, grouped):
+        if grouped:                               # [G, P, page, ...]
             G, P = p.shape[:2]
             tail = p.shape[3:]
             d = p.reshape((G, P * page_size) + tail)
             d = jnp.pad(d, ((0, 0), (0, cache_len - P * page_size))
                         + ((0, 0),) * len(tail))
             return d[:, None]
-        P = p.shape[0]                            # [P, page, KV, hd]
+        P = p.shape[0]                            # [P, page, ...]
         tail = p.shape[2:]
         d = p.reshape((P * page_size,) + tail)
         d = jnp.pad(d, ((0, cache_len - P * page_size),)
                     + ((0, 0),) * len(tail))
         return d[None]
-    return jax.tree.map(one, page_caches)
+    return _map_stack(page_caches, one)
 
 
 def chunked_prefill_supported(cfg: ModelConfig) -> bool:
@@ -601,21 +711,21 @@ def chunked_prefill_supported(cfg: ModelConfig) -> bool:
 def gather_pages(pool_caches, page_ids):
     """Pull the listed pages out of every pool leaf (device -> host tier)."""
     ids = jnp.asarray(page_ids, jnp.int32)
-    return jax.tree.map(
-        lambda pool: pool[:, ids] if pool.ndim == 5 else pool[ids],
-        pool_caches)
+    return _map_stack(
+        pool_caches,
+        lambda pool, grouped: pool[:, ids] if grouped else pool[ids])
 
 
 def scatter_pages(pool_caches, page_data, page_ids):
     """Write page-granular data back into the listed pool pages."""
     ids = jnp.asarray(page_ids, jnp.int32)
 
-    def one(pool, data):
+    def one(pool, data, grouped):
         data = jnp.asarray(data).astype(pool.dtype)
-        if pool.ndim == 5:
+        if grouped:
             return pool.at[:, ids].set(data)
         return pool.at[ids].set(data)
-    return jax.tree.map(one, pool_caches, page_data)
+    return _map_stack2(pool_caches, page_data, one)
 
 
 def stack_cache_specs(cfg: ModelConfig) -> dict:

@@ -1,11 +1,12 @@
 from repro.serve.api import (EngineConfig, Frontend, KVBackend,  # noqa
                              ParkingTransport, ParkMeta, Request, Sampler,
-                             SamplingParams, Scheduler, default_page_budget,
-                             make_engine, make_frontend, make_kv_backend,
-                             make_sampler, make_scheduler,
+                             SamplingParams, Scheduler, StateBackend,
+                             default_page_budget, make_engine,
+                             make_frontend, make_kv_backend, make_sampler,
+                             make_scheduler, make_state_backend,
                              register_frontend, register_kv_backend,
                              register_sampler, register_scheduler,
-                             slo_budget)
+                             register_state_backend, slo_budget)
 from repro.serve.engine import ServingEngine  # noqa
 from repro.serve.frontend import (LocalFrontend, RequestHandle,  # noqa
                                   VirtualClock)

@@ -8,8 +8,11 @@ five protocols, each the serving analogue of a paper subsystem:
 
   Scheduler        <- Queue Subsystem   (doorbell -> WQE dispatch, QoS
                       classes over a real N-queue HostMultiQueue)
-  KVBackend        <- Resource Subsystem (MTT/page accounting + the KV
-                      memory layout: dense slabs or the paged pool)
+  StateBackend     <- Resource Subsystem (MTT/page accounting + the
+                      decode-state layout: dense KV slabs, the paged KV
+                      pool, MLA latent pages, or constant-size recurrent
+                      state — the paper's QPC, a compact per-connection
+                      context, generalized to "whatever a slot needs")
   ParkingTransport <- Transport Subsystem (host-tier park/restore moves
                       with BusModel timing, the VoQ overflow path)
   Sampler          <- a Semantics-tier handler (sPIN's model): per-token
@@ -20,13 +23,16 @@ five protocols, each the serving analogue of a paper subsystem:
                       per-token streaming, SLO-graded admission (§3.8)
 
 Implementations register by name (`register_scheduler`,
-`register_kv_backend`, `register_sampler`, `register_frontend`) so
+`register_state_backend`, `register_sampler`, `register_frontend`) so
 launchers, benchmarks, and third-party code select parts with a string —
-adding a scheduling policy, KV layout, sampling strategy, or serving
+adding a scheduling policy, state layout, sampling strategy, or serving
 front end is a plug-in, not an engine edit. serve/schedulers.py,
-serve/kv_backends.py, serve/samplers.py, serve/parking.py and
+serve/state_backends.py, serve/samplers.py, serve/parking.py and
 serve/frontend.py hold the built-ins; `make_engine` wires a full engine
 from an `EngineConfig` and `make_frontend` a front end over it.
+
+`KVBackend` / `register_kv_backend` / `make_kv_backend` remain as
+aliases of the renamed `StateBackend` surface for older call sites.
 """
 from __future__ import annotations
 
@@ -104,7 +110,8 @@ class EngineConfig:
                                   # per-step decode; DESIGN.md §3.6)
     eos_token: int = 0
     host_offload: bool = True     # VoQ overflow tier
-    kv_layout: str = "dense"      # KVBackend name: "dense" | "paged"
+    kv_layout: str = "dense"      # StateBackend name: "dense" | "paged"
+                                  # | "latent" (MLA) | "recurrent"
     scheduler: str = "fcfs"       # Scheduler name: "fcfs" | "priority" | ...
     sampler: str = "greedy"       # Sampler name: "greedy" | "stochastic"
     frontend: str = "local"       # Frontend name (DESIGN.md §3.8)
@@ -131,7 +138,7 @@ class EngineConfig:
 
 
 class ParkMeta(NamedTuple):
-    """Restore metadata a KVBackend attaches to parked KV state."""
+    """Restore metadata a StateBackend attaches to parked slot state."""
     length: int
     position: int
     slot: int
@@ -213,20 +220,35 @@ class Scheduler(Protocol):
 
 
 @runtime_checkable
-class KVBackend(Protocol):
-    """Resource Subsystem: KV memory layout + page accounting.
+class StateBackend(Protocol):
+    """Resource Subsystem: a slot's decode-state layout + accounting.
 
-    Owns the PagePool (the MTT) and every layout-specific state
-    operation; the engine never branches on the layout. `append` is
-    alloc-on-append capacity growth (also used to reserve the admission
-    `footprint`); `sync` re-exports indirection tables into the decode
-    state when they changed and is a no-op otherwise.
+    Generalizes the KV cache to "whatever state a slot's architecture
+    decodes from": dense KV slabs, paged KV behind an MTT, MLA latent
+    pages (`[kv_lora_rank + qk_rope_dim]` per token), or constant-size
+    recurrent carries (RWKV/Mamba `[H, hd, hd]`-style state). Owns the
+    PagePool (the MTT) and every layout-specific state operation; the
+    engine never branches on the layout. `append` is alloc-on-append
+    capacity growth (also used to reserve the admission `footprint`);
+    `sync` re-exports indirection tables into the decode state when they
+    changed and is a no-op otherwise.
+
+    Capability flags route engine behavior instead of config sniffing:
+    `needs_growth` gates span reservation/pool growth/preemption,
+    `supports_chunked_prefill` gates streaming prefill, and
+    `supports_prefix_share` gates the block prefix cache (a recurrent
+    carry folds the whole prefix into one tensor, so it declines).
     """
     needs_growth: bool            # True if capacity can run out mid-decode
+    supports_chunked_prefill: bool  # slot state extends a chunk at a time
+    supports_prefix_share: bool   # per-token blocks can back a PrefixCache
     pool: Any                     # PagePool (admission accounting)
 
     def init_state(self) -> dict: ...
     def footprint(self, req: Request) -> int: ...
+    # admission: None if `req` can ever be resident under this layout,
+    # else a human-readable reason (the engine raises it on submit)
+    def admission_error(self, req: Request) -> Optional[str]: ...
     def append(self, req_id: int, n_tokens: int) -> bool: ...
     # decode spans: claim page headroom for a whole span up front —
     # alloc-on-append cannot fire inside the jitted scan, so the engine
@@ -267,6 +289,12 @@ class KVBackend(Protocol):
     def import_state(self, snap: dict) -> dict: ...
     def snapshot_payload(self, payload: Any) -> Any: ...
     def restore_payload(self, data: Any) -> Any: ...
+
+
+# Back-compat alias: PRs 1-9 called this protocol `KVBackend`. The
+# rename is pure — same members, same registry object — so older
+# implementations and annotations keep working unmodified.
+KVBackend = StateBackend
 
 
 @runtime_checkable
@@ -349,7 +377,8 @@ class ParkingTransport(Protocol):
 # --------------------------------------------------------------------------
 
 SCHEDULERS: Dict[str, Type] = {}
-KV_BACKENDS: Dict[str, Type] = {}
+STATE_BACKENDS: Dict[str, Type] = {}
+KV_BACKENDS = STATE_BACKENDS    # back-compat alias (same dict object)
 SAMPLERS: Dict[str, Type] = {}
 FRONTENDS: Dict[str, Type] = {}
 
@@ -431,7 +460,9 @@ def _checked_register(kind: str, proto: Type, registry: Dict[str, Type]
 
 
 register_scheduler = _checked_register("scheduler", Scheduler, SCHEDULERS)
-register_kv_backend = _checked_register("kv backend", KVBackend, KV_BACKENDS)
+register_state_backend = _checked_register(
+    "state backend", StateBackend, STATE_BACKENDS)
+register_kv_backend = register_state_backend  # back-compat alias
 register_sampler = _checked_register("sampler", Sampler, SAMPLERS)
 register_frontend = _checked_register("frontend", Frontend, FRONTENDS)
 
@@ -445,12 +476,15 @@ def make_scheduler(name: str, n_classes: int = 4,
     return SCHEDULERS[name](n_classes=n_classes, capacity=capacity)
 
 
-def make_kv_backend(name: str, cfg, ecfg: EngineConfig) -> KVBackend:
-    from repro.serve import kv_backends  # noqa: F401  (registers built-ins)
-    if name not in KV_BACKENDS:
+def make_state_backend(name: str, cfg, ecfg: EngineConfig) -> StateBackend:
+    from repro.serve import state_backends  # noqa: F401 (registers built-ins)
+    if name not in STATE_BACKENDS:
         raise ValueError(f"unknown kv layout {name!r}; "
-                         f"registered: {sorted(KV_BACKENDS)}")
-    return KV_BACKENDS[name](cfg, ecfg)
+                         f"registered: {sorted(STATE_BACKENDS)}")
+    return STATE_BACKENDS[name](cfg, ecfg)
+
+
+make_kv_backend = make_state_backend  # back-compat alias
 
 
 def make_sampler(name: str) -> Sampler:

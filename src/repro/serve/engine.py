@@ -7,9 +7,10 @@ behind protocols and are selected by name through `EngineConfig`:
   Scheduler        (Queue Subsystem)    -> admission/ordering over QoS
                    class queues: fcfs | priority | round_robin
                    (serve/schedulers.py)
-  KVBackend        (Resource Subsystem) -> KV layout + page accounting:
-                   dense slabs | paged pool behind MTT rows
-                   (serve/kv_backends.py)
+  StateBackend     (Resource Subsystem) -> decode-state layout + page
+                   accounting: dense slabs | paged pool behind MTT rows
+                   | MLA latent pages | constant-size recurrent carries
+                   (serve/state_backends.py)
   ParkingTransport (Transport Subsystem)-> host-tier VoQ overflow moves,
                    bus-timed (serve/parking.py)
   Sampler          (per-token handler)  -> on-device token selection:
@@ -45,15 +46,16 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.models import transformer as tf
-from repro.serve.api import (EngineConfig, KVBackend, ParkingTransport,
-                             Request, Sampler, Scheduler, make_kv_backend,
+from repro.serve.api import (EngineConfig, ParkingTransport, Request,
+                             Sampler, Scheduler, StateBackend,
                              make_sampler, make_scheduler,
-                             request_from_state, request_to_state)
+                             make_state_backend, request_from_state,
+                             request_to_state)
 # Re-exports: the public request/config types live in serve/api.py and the
-# slot helpers in serve/kv_backends.py; older call sites import them here.
-from repro.serve.kv_backends import (_slot_extract, _slot_insert,  # noqa: F401
-                                     _slot_restore, _slot_set)
+# slot helpers in serve/state_backends.py; older call sites import them here.
+from repro.serve.state_backends import (_slot_extract,  # noqa: F401
+                                        _slot_insert, _slot_restore,
+                                        _slot_set)
 from repro.kernels.paged_attention import live_table_width
 from repro.serve.parking import HostParkingTransport
 from repro.serve.prefix_cache import PrefixCache
@@ -111,7 +113,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  policy: Policy = NULL_POLICY,
                  scheduler: Optional[Scheduler] = None,
-                 kv_backend: Optional[KVBackend] = None,
+                 kv_backend: Optional[StateBackend] = None,
                  transport: Optional[ParkingTransport] = None,
                  sampler: Optional[Sampler] = None):
         self.cfg = cfg
@@ -131,7 +133,7 @@ class ServingEngine:
         # completion stamps and the parking bus all read it, so a virtual
         # clock makes ordering and eviction tie-breaks fully deterministic
         self.clock = ecfg.clock
-        self.kv = kv_backend or make_kv_backend(ecfg.kv_layout, cfg, ecfg)
+        self.kv = kv_backend or make_state_backend(ecfg.kv_layout, cfg, ecfg)
         self.state = self.kv.init_state()
         self.sched = scheduler or make_scheduler(
             ecfg.scheduler, n_classes=ecfg.qos_classes,
@@ -147,12 +149,16 @@ class ServingEngine:
         self.prefill_pos = np.zeros(B, np.int64)  # prompt tokens ingested
         self._prefill_rr = 0                     # chunk-budget round-robin
         self.slot_req: List[Optional[Request]] = [None] * B
-        # chunked prefill (and the block cache built on its tail-compute
-        # path) need plain-attention caches; other configs fall back to
-        # monolithic prefill with no prefix reuse
-        self._chunked_ok = tf.chunked_prefill_supported(cfg)
+        # capability routing (DESIGN.md §10): the backend — not a config
+        # sniff — says whether its slot state extends a chunk at a time
+        # and whether per-token blocks can back the prefix cache; other
+        # layouts fall back to monolithic prefill with no prefix reuse
+        self._chunked_ok = bool(
+            getattr(self.kv, "supports_chunked_prefill", False))
         self.prefix = PrefixCache(
-            ecfg.prefix_cache_entries if self._chunked_ok else 0,
+            ecfg.prefix_cache_entries
+            if (self._chunked_ok
+                and getattr(self.kv, "supports_prefix_share", False)) else 0,
             block=ecfg.page_size,
             retain=self.kv.cache_retain, release=self.kv.cache_release)
         self._stalled: set = set()               # req_ids frozen in place
@@ -184,7 +190,7 @@ class ServingEngine:
 
     @property
     def pool(self):
-        """The KVBackend's PagePool (MTT accounting), for introspection."""
+        """The StateBackend's PagePool (MTT accounting), for introspection."""
         return self.kv.pool
 
     def _streaming(self) -> bool:
@@ -242,14 +248,11 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {len(req.prompt)} does not fit "
                 f"cache_len {self.ecfg.cache_len} (need len+1 <= cache_len)")
-        worst = min(len(req.prompt) + req.max_new_tokens,
-                    self.ecfg.cache_len)
-        if -(-worst // self.ecfg.page_size) > self.ecfg.n_pages:
-            # a single request needing more pages than the whole pool can
-            # never complete — it would park/preempt-cycle forever
-            raise ValueError(
-                f"request needs {worst} KV tokens but the pool holds only "
-                f"{self.ecfg.n_pages * self.ecfg.page_size}")
+        err = self.kv.admission_error(req)
+        if err is not None:
+            # layout-specific impossibility (e.g. more pages than the
+            # whole pool holds); constant-size layouts never refuse
+            raise ValueError(err)
         req.arrived_at = self.clock()
         return self.sched.submit(req)
 

@@ -114,3 +114,47 @@ def test_wkv6(B, S, H, hd, chunk):
     ry, rs = ref.wkv6_ref(r, k, v, logw, u, s0)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=2e-4)
     np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,hd", [(2, 2, 8), (1, 3, 16), (4, 1, 8)])
+def test_wkv6_decode(B, H, hd):
+    ks = jax.random.split(jax.random.PRNGKey(B * H * hd), 6)
+    r = _rand(ks[0], (B, H, hd), jnp.float32)
+    k = _rand(ks[1], (B, H, hd), jnp.float32)
+    v = _rand(ks[2], (B, H, hd), jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(jax.random.normal(ks[3], (B, H, hd)),
+                                  -8, 0.5)))
+    u = _rand(ks[4], (H, hd), jnp.float32) * 0.1
+    s0 = _rand(ks[5], (B, H, hd, hd), jnp.float32) * 0.1
+    y, s = ops.wkv6_decode(r, k, v, w, u, s0, interpret=True)
+    ry, rs = ref.wkv6_decode_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+    # one decode step == the t=1 column of the chunked scan
+    cy, cs = ops.wkv6_chunked(r[:, None], k[:, None], v[:, None],
+                              jnp.log(w)[:, None], u, s0, chunk=1,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(cy[:, 0]), np.asarray(y),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(s), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Di,N,bd", [(2, 8, 4, 8), (1, 32, 8, 16),
+                                       (3, 16, 4, 16)])
+def test_ssm_decode_step(B, Di, N, bd):
+    ks = jax.random.split(jax.random.PRNGKey(B * Di * N), 5)
+    h = _rand(ks[0], (B, Di, N), jnp.float32)
+    dA = jax.random.uniform(ks[1], (B, Di, N), jnp.float32, 0.5, 1.0)
+    dtx = _rand(ks[2], (B, Di), jnp.float32)
+    B_ssm = _rand(ks[3], (B, N), jnp.float32)
+    C_ssm = _rand(ks[4], (B, N), jnp.float32)
+    y, hn = ops.ssm_decode_step(h, dA, dtx, B_ssm, C_ssm, block_d=bd,
+                                interpret=True)
+    ry, rhn = ref.ssm_decode_step_ref(h, dA, dtx, B_ssm, C_ssm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hn), np.asarray(rhn), atol=1e-5)
+    # one decode step == the T=1 slice of the linear_scan recurrence
+    shs, shl = ops.linear_scan(dA[:, None], (dtx[..., None]
+                               * B_ssm[:, None, :])[:, None], h,
+                               block_d=bd, interpret=True)
+    np.testing.assert_allclose(np.asarray(shl), np.asarray(hn), atol=1e-5)

@@ -1,5 +1,8 @@
-"""Per-architecture smoke tests: reduced configs, one forward/train step on
-CPU, asserting output shapes and finiteness (deliverable f)."""
+"""Per-architecture smoke tests: reduced configs, one forward/train step
+on CPU asserting output shapes and finiteness (deliverable f), plus the
+engine-level pass — every config in the registry serves end-to-end
+through `ServingEngine` (DESIGN.md §10: one frame, every decode-state
+shape)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +12,8 @@ from repro.configs.registry import ARCH_NAMES, SMOKE_CONFIGS, get_config
 from repro.configs.shapes import applicable_shapes
 from repro.models import lm
 from repro.optim import AdamWConfig, adamw_init
+from repro.serve.api import EngineConfig, Request
+from repro.serve.engine import ServingEngine
 from repro.sharding.policy import NULL_POLICY
 from repro.train.train_step import make_train_step
 
@@ -104,6 +109,31 @@ def test_decode_matches_prefill(arch, smoke_params):
     # bounded absolute error
     assert np.abs(a - b).max() < 0.25, arch
     assert (a.argmax(-1) == b.argmax(-1)).mean() >= 0.5
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_engine_serves(arch, smoke_params):
+    """Every registry config submits through ServingEngine and completes
+    — the dense StateBackend is kind-generic, so no architecture is
+    gated out of the serving frame."""
+    cfg = SMOKE_CONFIGS[arch]
+    params = smoke_params(arch)
+    ecfg = EngineConfig(slots=2, cache_len=64, page_size=16, n_pages=24,
+                        decode_span=4, eos_token=-1)
+    eng = ServingEngine(cfg, params, ecfg)
+    rng = np.random.default_rng(1)
+    reqs = [Request(i, rng.integers(1, cfg.vocab_size, size=int(
+                        rng.integers(4, 12))).astype(np.int32),
+                    max_new_tokens=5) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done()
+    assert sorted(r.req_id for r in done) == [0, 1, 2], arch
+    for r in done:
+        assert len(r.tokens_out) == 5, arch
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens_out), arch
+    s = eng.stats
+    assert s["host_syncs"] == s["prefills"] + s["decode_spans"], arch
 
 
 def test_shape_applicability():

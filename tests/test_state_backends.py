@@ -1,0 +1,232 @@
+"""StateBackend matrix (DESIGN.md §10): every decode-state shape through
+the same engine frame.
+
+Per backend (dense / paged / recurrent / latent): engine-served greedy
+token streams byte-identical to model-level decode at decode_span {1,8},
+byte-identical through a park/unpark storm and through crash-restore at
+step boundaries, plus the capability surface the engine routes on
+(growth, chunked prefill, prefix sharing, admission) and loud
+registration failure for non-conforming backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, MoEConfig, RWKVConfig
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.ft.chaos import crash_anywhere_sweep, drive
+from repro.models import lm
+from repro.serve.api import (EngineConfig, Request, SamplingParams,
+                             StateBackend, make_state_backend,
+                             register_state_backend)
+from repro.serve.engine import ServingEngine
+from repro.serve.loadgen import TraceSpec, make_trace
+from repro.sharding.policy import NULL_POLICY
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """arch-family -> (cfg, params): one tiny f32 config per decode-state
+    shape — plain attention (dense/paged), pure RWKV-6 (recurrent), and
+    all-MLA (latent)."""
+    attn = SMOKE_CONFIGS["qwen3-8b"].scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    rwkv = SMOKE_CONFIGS["rwkv6-1.6b"].scaled(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, rwkv=RWKVConfig(head_dim=32),
+        dtype="float32")
+    mla = SMOKE_CONFIGS["deepseek-v2-lite-16b"].scaled(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256,
+        mla=MLAConfig(kv_lora_rank=32, q_lora_rank=0, qk_nope_dim=16,
+                      qk_rope_dim=8, v_head_dim=16),
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=48, n_shared=1,
+                      first_dense=1),
+        dtype="float32")
+    return {name: (cfg, lm.init_params(cfg, jax.random.PRNGKey(0)))
+            for name, cfg in
+            [("attn", attn), ("rwkv", rwkv), ("mla", mla)]}
+
+
+# the matrix: (model family, backend layout)
+MATRIX = [("attn", "dense"), ("attn", "paged"),
+          ("rwkv", "recurrent"), ("mla", "latent")]
+
+
+def _ecfg_kw(layout, **over):
+    kw = dict(slots=2, cache_len=64, page_size=8, n_pages=24,
+              kv_layout=layout, decode_span=4, eos_token=-1)
+    kw.update(over)
+    return kw
+
+
+def _model_greedy(cfg, params, prompt, max_new, cache_len=64):
+    logits, st = lm.prefill(
+        params, jnp.asarray(np.asarray(prompt, np.int32)[None]),
+        cfg, NULL_POLICY, cache_len=cache_len)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(max_new - 1):
+        lg, st = lm.decode_step(params, jnp.asarray([toks[-1]],
+                                                    dtype=jnp.int32),
+                                st, cfg, NULL_POLICY)
+        toks.append(int(jnp.argmax(lg[0])))
+    return toks
+
+
+def _reqs(vocab, n=3, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(1, vocab, size=int(
+                        rng.integers(5, 14))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(5, 10)),
+                    sampling=SamplingParams())
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# equivalence: engine stream == model-level greedy, span {1, 8}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,layout", MATRIX)
+@pytest.mark.parametrize("span", [1, 8])
+def test_engine_matches_model(tiny, family, layout, span):
+    cfg, params = tiny[family]
+    reqs = _reqs(cfg.vocab_size)
+    ref = {r.req_id: _model_greedy(cfg, params, r.prompt,
+                                   r.max_new_tokens) for r in reqs}
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(**_ecfg_kw(layout, decode_span=span)))
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done()
+    assert {r.req_id: r.tokens_out for r in done} == ref
+    s = eng.stats
+    assert s["host_syncs"] == s["prefills"] + s["decode_spans"]
+
+
+# ---------------------------------------------------------------------------
+# park/unpark: a park storm must not change any stream
+# ---------------------------------------------------------------------------
+
+SPEC = TraceSpec(arrival="bursty", rate=0.5, burst=4.0, seed=3,
+                 prompt_lens=((1.0, 5, 14),), output_lens=((1.0, 5, 10),))
+
+
+@pytest.mark.parametrize("family,layout", MATRIX)
+def test_park_unpark_stream_identity(tiny, family, layout):
+    cfg, params = tiny[family]
+    kw = _ecfg_kw(layout)
+    trace = lambda: make_trace(SPEC, 5, cfg.vocab_size)
+    clean = drive(cfg, params, kw, trace())
+    stormed = drive(cfg, params, kw, trace(),
+                    park_storm_at=(2, 4), fault_seed=7)
+    assert stormed.streams == clean.streams
+    assert stormed.engine_stats["parked"] > 0
+    assert (stormed.engine_stats["unparked"]
+            == stormed.engine_stats["parked"])
+
+
+# ---------------------------------------------------------------------------
+# crash-restore: byte-identical after crash at step boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,layout", MATRIX)
+def test_crash_restore_stream_identity(tiny, family, layout):
+    cfg, params = tiny[family]
+    # backend= is the sweep's layout override (ft/chaos.py); boundaries
+    # subset keeps the matrix fast — the every-boundary sweep runs for
+    # dense/paged in test_crash_recovery.py
+    clean, reports = crash_anywhere_sweep(
+        cfg, params, _ecfg_kw("dense"),
+        lambda: make_trace(SPEC, 4, cfg.vocab_size),
+        boundaries=(1, 2, 3), backend=layout)
+    assert len(reports) == 3
+    assert all(len(r.crash_log) == 1 for r in reports)
+
+
+# ---------------------------------------------------------------------------
+# capability surface
+# ---------------------------------------------------------------------------
+
+def test_capability_flags(tiny):
+    ecfg = EngineConfig(**_ecfg_kw("dense"))
+    attn_cfg = tiny["attn"][0]
+    for layout, chunked, share, growth in [
+            ("dense", True, True, False), ("paged", True, True, True)]:
+        kv = make_state_backend(layout, attn_cfg, ecfg)
+        assert kv.supports_chunked_prefill is chunked
+        assert kv.supports_prefix_share is share
+        assert kv.needs_growth is growth
+    rec = make_state_backend("recurrent", tiny["rwkv"][0], ecfg)
+    lat = make_state_backend("latent", tiny["mla"][0], ecfg)
+    for kv in (rec, lat):
+        assert not kv.supports_chunked_prefill
+        assert not kv.supports_prefix_share
+    assert not rec.needs_growth
+    assert lat.needs_growth
+
+
+def test_prefix_cache_disabled_without_capability(tiny):
+    """Backends that decline prefix sharing must zero the engine's
+    prefix-cache capacity — not crash on share_prefix."""
+    for family, layout in [("rwkv", "recurrent"), ("mla", "latent")]:
+        cfg, params = tiny[family]
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(**_ecfg_kw(layout, prefix_cache_entries=16)))
+        assert eng.prefix.capacity == 0
+
+
+def test_backend_rejects_wrong_family(tiny):
+    ecfg = EngineConfig(**_ecfg_kw("dense"))
+    with pytest.raises(ValueError, match="constant-size recurrence"):
+        make_state_backend("recurrent", tiny["attn"][0], ecfg)
+    with pytest.raises(ValueError, match="MLA"):
+        make_state_backend("latent", tiny["rwkv"][0], ecfg)
+    # plain paged validates at init_state (the lm-level cache dispatch):
+    # the guard text must name the missing capability, not a config list
+    with pytest.raises(ValueError, match="paged serving needs per-token"):
+        make_state_backend("paged", tiny["rwkv"][0], ecfg).init_state()
+
+
+def test_admission_is_backend_defined(tiny):
+    """Paged admission refuses a request larger than the whole pool;
+    recurrent state is O(1) so the same request admits fine."""
+    attn_cfg, attn_params = tiny["attn"]
+    kw = _ecfg_kw("paged", cache_len=64, n_pages=4, page_size=8)
+    eng = ServingEngine(attn_cfg, attn_params, EngineConfig(**kw))
+    big = Request(0, np.arange(1, 30, dtype=np.int32), max_new_tokens=30)
+    with pytest.raises(ValueError, match="pool holds only"):
+        eng.try_submit(big)
+    rcfg, rparams = tiny["rwkv"]
+    kw = _ecfg_kw("recurrent", cache_len=64, n_pages=4, page_size=8)
+    eng = ServingEngine(rcfg, rparams, EngineConfig(**kw))
+    big = Request(0, np.arange(1, 30, dtype=np.int32), max_new_tokens=30)
+    assert eng.try_submit(big)
+    done = eng.run_until_done()
+    assert len(done) == 1 and len(done[0].tokens_out) == 30
+
+
+def test_nonconforming_backend_registration_fails():
+    with pytest.raises(TypeError, match="does not satisfy"):
+        @register_state_backend("broken-backend")
+        class Broken:
+            def footprint(self, req):
+                return 1
+    from repro.serve.api import STATE_BACKENDS
+    assert "broken-backend" not in STATE_BACKENDS
+
+
+def test_legacy_aliases_resolve():
+    from repro.serve.api import (KVBackend, KV_BACKENDS, STATE_BACKENDS,
+                                 make_kv_backend, make_state_backend,
+                                 register_kv_backend)
+    assert KVBackend is StateBackend
+    assert KV_BACKENDS is STATE_BACKENDS
+    assert make_kv_backend is make_state_backend
+    from repro.serve.api import register_state_backend as reg
+    assert register_kv_backend is reg
+    import repro.serve.kv_backends as kvb
+    import repro.serve.state_backends as sb
+    assert kvb.PagedKV is sb.PagedKV
